@@ -1,0 +1,239 @@
+"""Synthetic performance-bug corpus (paper Table 2 analogue).
+
+Twelve inefficiency patterns drawn from the paper's taxonomy, each with
+the expected waste kind and (where meaningful) an optimized twin used by
+the case studies. Pattern #11 is the *adjacent-location* class the paper
+documents as a JXPerf miss (Ant#53637): our buffer-granular watchpoints
+DO catch it — a documented improvement of the TPU adaptation
+(EXPERIMENTS.md §Paper-validation).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Bug(NamedTuple):
+    name: str
+    kind: str                     # dead_store | silent_store | silent_load
+    build: Callable[[], Tuple[Callable, tuple]]
+    fixed: Optional[Callable[[], Tuple[Callable, tuple]]] = None
+    expect_detected: bool = True
+    source: str = ""
+
+
+def _linear_search():
+    arr = jnp.arange(256)
+    keys = jnp.arange(48) % 7
+
+    def f(keys, arr):
+        def body(c, k):
+            return c + jnp.any(arr == k).astype(jnp.int32), None
+        out, _ = jax.lax.scan(body, jnp.int32(0), keys)
+        return out
+    return f, (keys, arr)
+
+
+def _linear_search_fixed():
+    # hash-set analogue: one vectorized membership test
+    arr = jnp.arange(256)
+    keys = jnp.arange(48) % 7
+
+    def f(keys, arr):
+        idx = jnp.searchsorted(arr, keys)          # O(log n) per key
+        idx = jnp.clip(idx, 0, arr.shape[0] - 1)
+        return (arr[idx] == keys).sum()
+    return f, (keys, arr)
+
+
+def _loop_invariant_pow():
+    keys = jnp.arange(24.0)
+    x = jnp.linspace(0, 1, 256)
+
+    def f(keys, x):
+        def body(c, k):
+            r23 = jnp.exp(x * 0.23)          # invariant, recomputed/stored
+            return c + r23.sum() * k, None
+        out, _ = jax.lax.scan(body, jnp.float32(0), keys)
+        return out
+    return f, (keys, x)
+
+
+def _loop_invariant_pow_fixed():
+    keys = jnp.arange(24.0)
+    x = jnp.linspace(0, 1, 256)
+
+    def f(keys, x):
+        r23 = jnp.exp(x * 0.23)              # hoisted + memoized
+        s = r23.sum()
+        def body(c, k):
+            return c + s * k, None
+        out, _ = jax.lax.scan(body, jnp.float32(0), keys)
+        return out
+    return f, (keys, x)
+
+
+def _dead_intermediates():
+    x = jnp.linspace(0, 1, 512)
+
+    def f(x):
+        acc = jnp.float32(0)
+        w = x
+        for i in range(16):
+            w = jnp.exp(x) * (i + 1)          # stored, never loaded
+            acc = acc + x.sum()
+        return acc, w
+    return f, (x,)
+
+
+def _clear_then_overwrite():
+    vals = jnp.arange(512.0)
+
+    def f(vals):
+        def body(c, v):
+            buf = jnp.zeros(128)              # "clear()"
+            buf = v * jnp.ones(128)           # fully overwritten, zeros dead
+            return c + buf.sum(), None
+        out, _ = jax.lax.scan(body, jnp.float32(0), vals[:16])
+        return out
+    return f, (vals,)
+
+
+def _repeated_max_scan():
+    segs = jnp.sort(jax.random.uniform(jax.random.PRNGKey(0), (256,)))
+    qs = jnp.linspace(0, 1, 32)
+
+    def f(qs, segs):
+        def body(c, q):
+            n = jnp.sum(segs < q)             # full scan per query
+            return c + n, None
+        out, _ = jax.lax.scan(body, jnp.int32(0), qs)
+        return out
+    return f, (qs, segs)
+
+
+def _repeated_max_scan_fixed():
+    segs = jnp.sort(jax.random.uniform(jax.random.PRNGKey(0), (256,)))
+    qs = jnp.linspace(0, 1, 32)
+
+    def f(qs, segs):
+        return jnp.searchsorted(segs, qs).sum()   # sorted early-exit
+    return f, (qs, segs)
+
+
+def _missed_cse():
+    x = jnp.linspace(0, 1, 512)
+
+    def f(x):
+        a = jnp.tanh(x * 3.0).sum()
+        b = jnp.tanh(x * 3.0).sum()          # identical expression
+        return a + b
+    return f, (x,)
+
+
+def _dense_reinit():
+    idx = jnp.arange(8)
+
+    def f(idx):
+        def body(c, i):
+            dense = jnp.zeros(1024)           # dense array for sparse data
+            dense = dense.at[i].set(1.0)
+            return c + dense.sum(), None
+        out, _ = jax.lax.scan(body, jnp.float32(0), idx)
+        return out
+    return f, (idx,)
+
+
+def _astype_roundtrip():
+    x = jnp.linspace(1, 2, 2048, dtype=jnp.float32)
+
+    def f(x):
+        y = x
+        for _ in range(8):
+            y = (y * 2.0) / 2.0                 # value-identical roundtrip
+        return y.sum()
+    return f, (x,)
+
+
+def _recompute_softmax():
+    logits = jax.random.normal(jax.random.PRNGKey(1), (64,))
+    steps = jnp.arange(16)
+
+    def f(steps, logits):
+        def body(c, t):
+            p = jax.nn.softmax(logits)        # unchanged input every iter
+            return c + p[0] * t, None
+        out, _ = jax.lax.scan(body, jnp.float32(0), steps)
+        return out
+    return f, (steps, logits)
+
+
+def _regather_embedding():
+    table = jax.random.normal(jax.random.PRNGKey(2), (128, 16))
+    toks = jnp.zeros(32, jnp.int32)           # same row every time
+
+    def f(toks, table):
+        def body(c, t):
+            row = table[t]                    # same row re-gathered
+            return c + row.sum(), None
+        out, _ = jax.lax.scan(body, jnp.float32(0), toks)
+        return out
+    return f, (toks, table)
+
+
+def _adjacent_shift():
+    """Ant#53637 analogue: repeated element SHIFTS — same values move to
+    ADJACENT locations. JXPerf's element-granular watchpoints miss this
+    class (paper §6); JXPerf-JAX's buffer-granular watchpoints catch it
+    (repeated reads of the shifted-but-unchanged container) — a documented
+    improvement of the adaptation."""
+    x = jnp.arange(64.0)
+
+    def f(x):
+        def body(c, _):
+            return jnp.roll(c, 1), None       # values move, never repeat in place
+        out, _ = jax.lax.scan(body, x, None, length=24)
+        return out.sum()
+    return f, (x,)
+
+
+def _zero_accumulate():
+    zeros = jnp.zeros(32)
+    x = jnp.linspace(0, 1, 256)
+
+    def f(zeros, x):
+        def body(c, z):
+            return c + z, None                # accumulates nothing
+        out, _ = jax.lax.scan(body, x[:32], zeros)
+        return out.sum()
+    return f, (zeros, x)
+
+
+CORPUS: List[Bug] = [
+    Bug("linear_search_contains", "silent_load", _linear_search,
+        _linear_search_fixed, True, "Apache Collections#588 analogue"),
+    Bug("loop_invariant_pow", "silent_store", _loop_invariant_pow,
+        _loop_invariant_pow_fixed, True, "NPB-3.0 IS analogue"),
+    Bug("dead_intermediates", "dead_store", _dead_intermediates, None, True,
+        "Dacapo bloat analogue"),
+    Bug("clear_then_overwrite", "dead_store", _clear_then_overwrite, None,
+        True, "FindBugs Frame.copyFrom analogue"),
+    Bug("repeated_segment_scan", "silent_load", _repeated_max_scan,
+        _repeated_max_scan_fixed, True, "JFreeChart getExceptionSegmentCount analogue"),
+    Bug("missed_cse", "silent_store", _missed_cse, None, True,
+        "scimark.fft code-gen analogue"),
+    Bug("dense_reinit", "silent_store", _dense_reinit, None, True,
+        "dense-array-for-sparse-data analogue"),
+    Bug("astype_roundtrip", "silent_store", _astype_roundtrip, None, True,
+        "value-identical convert chain"),
+    Bug("recompute_softmax", "silent_store", _recompute_softmax, None, True,
+        "MemoizeIt-class redundancy"),
+    Bug("regather_embedding", "silent_load", _regather_embedding, None, True,
+        "cacheable-data analogue"),
+    Bug("adjacent_shift", "silent_load", _adjacent_shift, None, True,
+        "Ant#53637 analogue — JXPerf misses; buffer-granular JXPerf-JAX detects"),
+    Bug("zero_accumulate", "silent_store", _zero_accumulate, None, True,
+        "useless value assignment analogue"),
+]

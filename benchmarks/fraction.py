@@ -1,0 +1,33 @@
+"""Fig. 4 analogue: F^{DS,SS,SL} across the corpus suite at sampling
+periods {500, 1K, 5K, 10K} events (scaled to interpreter event rates)."""
+from __future__ import annotations
+
+import time
+
+from repro.configs.base import ProfilerConfig
+from repro.core.interpreter import profile_fn
+
+from benchmarks.corpus import CORPUS
+
+PERIODS = (500, 1000, 5000, 10000)
+SUITE = ("linear_search_contains", "loop_invariant_pow",
+         "dead_intermediates", "repeated_segment_scan")
+
+
+def run():
+    rows = []
+    bugs = {b.name: b for b in CORPUS}
+    for name in SUITE:
+        b = bugs[name]
+        fn, args = b.build()
+        for period in PERIODS:
+            cfg = ProfilerConfig(enabled=True, period=period,
+                                 num_watchpoints=4)
+            t0 = time.perf_counter()
+            rep = profile_fn(fn, *args, cfg=cfg)
+            us = (time.perf_counter() - t0) * 1e6
+            fr = rep.fractions()
+            rows.append((f"fraction.{name}.p{period}", us,
+                         f"DS={fr['dead_store']:.3f}|SS={fr['silent_store']:.3f}"
+                         f"|SL={fr['silent_load']:.3f}"))
+    return rows

@@ -1,0 +1,55 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle vs jitted
+oracle. Wall-times on CPU are indicative only; correctness deltas are the
+real payload (TPU perf comes from the dry-run roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_xla import flash_xla
+from repro.kernels.silent_compare import silent_compare
+
+
+def _time(fn, n=3):
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    B, S, Hq, Hkv, D = 1, 256, 4, 2, 64
+    q = jax.random.normal(key, (B, S, Hq, D), jnp.float32)
+    k = jax.random.normal(key, (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(key, (B, S, Hkv, D), jnp.float32)
+
+    want = ref.attention_ref(q, k, v, causal=True)
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    err = float(jnp.abs(want - got).max())
+    t = _time(jax.jit(lambda: ref.attention_ref(q, k, v, causal=True)))
+    rows.append(("kernel.flash_pallas_interp", t * 1e6,
+                 f"max_err_vs_ref={err:.2e}"))
+
+    got2 = flash_xla(q, k, v, True, 0, 128)
+    err2 = float(jnp.abs(want - got2).max())
+    t2 = _time(jax.jit(lambda: flash_xla(q, k, v, True, 0, 128)))
+    rows.append(("kernel.flash_xla", t2 * 1e6, f"max_err_vs_ref={err2:.2e}"))
+
+    a = jax.random.normal(key, (1 << 18,))
+    b = a.at[: 1 << 14].mul(1.5)
+    cnt_k = int(silent_compare(a, b, 0.0, interpret=True))
+    cnt_r = int(ref.silent_compare_ref(a, b, 0.0))
+    t3 = _time(jax.jit(lambda: ref.silent_compare_ref(a, b, 0.0)))
+    rows.append(("kernel.silent_compare", t3 * 1e6,
+                 f"kernel=={cnt_k}|ref=={cnt_r}|match={cnt_k == cnt_r}"))
+    return rows

@@ -1,0 +1,87 @@
+"""Tab. 1 / Fig. 6 analogue: detection overhead vs native execution.
+
+Two numbers, honestly separated (DESIGN.md §2):
+  * Tier-3 (production mode): % step-time overhead of the detectors on a
+    real jitted train step — the analogue of the paper's 7% claim;
+  * Tier-1 (analysis mode): interpreter slowdown vs the jitted step at
+    several sampling periods — expensive by construction (software
+    watchpoints), reported for completeness.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import ProfilerConfig, TrainConfig
+from repro.core.detectors import TrainingDetectors
+from repro.core.interpreter import profile_fn
+from repro.models.zoo import build_model
+from repro.train import state as TS
+from repro.train.step import make_train_step
+
+
+def _time(fn, n=5):
+    fn()                                    # warmup
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def run():
+    rows = []
+    cfg = registry.get_config("qwen3-1.7b").smoke()
+    model = build_model(cfg)
+    tc = TrainConfig(total_steps=100, warmup_steps=1)
+    step = jax.jit(make_train_step(model, tc))
+    state = TS.create(model, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+
+    holder = {"state": state}
+
+    def native():
+        s, m = step(holder["state"], batch)
+        jax.block_until_ready(m["loss"])
+        holder["state"] = s
+    t_native = _time(native)
+    rows.append(("overhead.native_step", t_native * 1e6, "baseline"))
+
+    det = TrainingDetectors(ProfilerConfig(enabled=True), leaves_per_step=4)
+    stepno = [0]
+    # warm the silent_compare jit cache over every leaf shape first (one-off
+    # compilation; production runs amortize this to zero)
+    from repro.kernels import ops as _ops
+    for leaf in jax.tree_util.tree_leaves(holder["state"].params):
+        _ops.silent_fraction(leaf, leaf, tol=det.tol)
+
+    def with_tier3():
+        before = holder["state"].params
+        s, m = step(holder["state"], batch)
+        jax.block_until_ready(m["loss"])
+        det.on_step(stepno[0], before, s.params)
+        det.on_batch(stepno[0], batch)
+        stepno[0] += 1
+        holder["state"] = s
+    for _ in range(6):               # populate reservoir + remaining jits
+        with_tier3()
+    t3 = _time(with_tier3, n=10)
+    rows.append(("overhead.tier3_step", t3 * 1e6,
+                 f"slowdown={t3/t_native:.3f}x"))
+
+    # Tier-1: smaller forward-only subject, per period
+    fwd = lambda toks: model.forward(  # noqa: E731
+        jax.tree_util.tree_map(lambda x: x, holder["state"].params), toks)[0].sum()
+    small = toks[:1, :16]
+    for period in (1000, 5000, 10000):
+        pc = ProfilerConfig(enabled=True, period=period)
+        t0 = time.perf_counter()
+        profile_fn(fwd, small, cfg=pc)
+        t1 = time.perf_counter() - t0
+        rows.append((f"overhead.tier1_p{period}", t1 * 1e6,
+                     f"vs_native={t1/t_native:.0f}x"))
+    return rows

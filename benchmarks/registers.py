@@ -1,0 +1,25 @@
+"""Fig. 5 analogue: fraction stability across 1-4 watchpoint slots at a
+fixed period — validates the reservoir scheme's insensitivity claim."""
+from __future__ import annotations
+
+import time
+
+from repro.configs.base import ProfilerConfig
+from repro.core.interpreter import profile_fn
+
+from benchmarks.corpus import CORPUS
+
+
+def run():
+    rows = []
+    bug = next(b for b in CORPUS if b.name == "linear_search_contains")
+    fn, args = bug.build()
+    for n in (1, 2, 3, 4):
+        cfg = ProfilerConfig(enabled=True, period=2000, num_watchpoints=n)
+        t0 = time.perf_counter()
+        rep = profile_fn(fn, *args, cfg=cfg)
+        us = (time.perf_counter() - t0) * 1e6
+        fr = rep.fractions()
+        rows.append((f"registers.linear_search.n{n}", us,
+                     f"SL={fr['silent_load']:.3f}"))
+    return rows

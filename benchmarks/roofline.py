@@ -1,0 +1,41 @@
+"""§Roofline summary rows from the dry-run artifacts (experiments/dryrun).
+
+The dry-run (repro.launch.dryrun) must have produced the per-cell JSON
+records; this module renders the single-pod baseline table per the
+assignment (the multi-pod pass is recorded too)."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def run():
+    rows = []
+    files = sorted(glob.glob(str(OUT / "*_single_baseline.json")))
+    if not files:
+        return [("roofline.missing", 0.0,
+                 "run: PYTHONPATH=src python -m repro.launch.dryrun")]
+    n_ok = n_skip = 0
+    for f in files:
+        r = json.loads(Path(f).read_text())
+        cell = f"{r['arch']}.{r['shape']}"
+        if r["status"] == "skipped":
+            n_skip += 1
+            rows.append((f"roofline.{cell}", 0.0, "skipped:" + r["reason"][:40]))
+            continue
+        if r["status"] != "ok":
+            rows.append((f"roofline.{cell}", 0.0, "ERROR"))
+            continue
+        n_ok += 1
+        rows.append((
+            f"roofline.{cell}", r["t_compute_s"] * 1e6,
+            f"tc={r['t_compute_s']:.3f}s|tm={r['t_memory_s']:.3f}s"
+            f"|tcoll={r['t_collective_s']:.3f}s|dom={r['dominant']}"
+            f"|rf={r.get('roofline_fraction', 0):.3f}"
+            f"|useful={r.get('useful_flops_ratio', 0):.2f}"))
+    rows.append(("roofline.summary", 0.0,
+                 f"cells_ok={n_ok}|cells_skipped={n_skip}"))
+    return rows

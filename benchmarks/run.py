@@ -1,0 +1,34 @@
+"""Benchmark aggregator: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+  fraction.*      — Fig. 4 (wasteful-op fractions vs sampling period)
+  registers.*     — Fig. 5 (fractions vs #watchpoints)
+  overhead.*      — Tab. 1/Fig. 6 (runtime slowdown / memory of detection)
+  effectiveness.* — Tab. 2 (bug-corpus detection rate)
+  casestudy.*     — Tab. 3 (guided-optimization speedups)
+  kernel.*        — Pallas kernels vs oracles
+  roofline.*      — §Roofline summary from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (casestudies, effectiveness, fraction, kernels,
+                            overhead, registers, roofline)
+    mods = [fraction, registers, overhead, effectiveness, casestudies,
+            kernels, roofline]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for m in mods:
+        if only and only not in m.__name__:
+            continue
+        for row in m.run():
+            name, us, derived = row
+            print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

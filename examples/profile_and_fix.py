@@ -1,0 +1,72 @@
+"""The paper's workflow end to end: profile -> read the context pair ->
+apply the guided fix -> re-profile + measure speedup.
+
+Subject: the JFreeChart getExceptionSegmentCount() analogue — a linear
+scan over a sorted array repeated per query (paper §7.7).
+
+    PYTHONPATH=src python examples/profile_and_fix.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ProfilerConfig
+from repro.core import profile_fn, render
+
+
+def count_intersections_slow(queries, segments):
+    def body(c, q):
+        n = jnp.sum(segments < q)            # full scan per query
+        return c + n, None
+    out, _ = jax.lax.scan(body, jnp.int32(0), queries)
+    return out
+
+
+def count_intersections_fast(queries, segments):
+    # the guided fix: the array is sorted -> binary search, no re-reads
+    return jnp.searchsorted(segments, queries).sum().astype(jnp.int32)
+
+
+def timeit(fn, *args, n=30):
+    jfn = jax.jit(fn)
+    jax.block_until_ready(jfn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = jfn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def main():
+    segs = jnp.sort(jax.random.uniform(jax.random.PRNGKey(0), (2048,)))
+    qs = jnp.linspace(0, 1, 64)
+    cfg = ProfilerConfig(enabled=True, period=200)
+
+    print("== profiling the slow version ==")
+    rep = profile_fn(count_intersections_slow, qs, segs, cfg=cfg)
+    print(render(rep, top_k=1))
+    sl = rep.fractions()["silent_load"]
+    print(f"\n-> F^silent_load = {sl:.0%}: the same segment array is "
+          "re-read unchanged for every query (paper §7.7 symptom).")
+    print("-> guided fix: the array is sorted; replace the linear scan "
+          "with binary search.\n")
+
+    rep2 = profile_fn(count_intersections_fast, qs, segs, cfg=cfg)
+    print("== after the fix ==")
+    cut = rep.total_load_events / max(rep2.total_load_events, 1)
+    print(f"total memory loads cut {cut:.0f}x "
+          f"({rep.total_load_events:,} -> {rep2.total_load_events:,}) — "
+          "the paper's §7 headline metric")
+
+    a = int(count_intersections_slow(qs, segs))
+    b = int(count_intersections_fast(qs, segs))
+    assert a == b, (a, b)
+    t_slow = timeit(count_intersections_slow, qs, segs)
+    t_fast = timeit(count_intersections_fast, qs, segs)
+    print(f"result identical ({a}); speedup {t_slow/t_fast:.1f}x "
+          f"({t_slow*1e6:.0f}us -> {t_fast*1e6:.0f}us)")
+
+
+if __name__ == "__main__":
+    main()

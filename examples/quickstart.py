@@ -1,0 +1,38 @@
+"""Quickstart: train a tiny model with JXPerf-JAX watching, then read the
+three detection tiers' reports.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import ProfilerConfig
+from repro.core import analyze_waste, profile_fn, render
+from repro.launch.train import run as train_run
+
+
+def main():
+    # 1) end-to-end smoke train with Tier-3 detectors + Tier-2 waste report
+    print("=" * 70)
+    print("Training qwen3-1.7b (reduced) with Tier-3 detectors on:")
+    train_run("qwen3-1.7b", smoke=True, steps=15, batch=4, seq=64,
+              profile=True, waste_report=True, log_every=5)
+
+    # 2) Tier-1: profile a deliberately wasteful function
+    print("=" * 70)
+    print("Tier-1 on a linear-search-in-loop (Collections#588 analogue):")
+
+    def linear_search(keys, arr):
+        def body(c, k):
+            return c + jnp.any(arr == k).astype(jnp.int32), None
+        out, _ = jax.lax.scan(body, jnp.int32(0), keys)
+        return out
+
+    rep = profile_fn(linear_search, jnp.arange(48) % 7, jnp.arange(256),
+                     cfg=ProfilerConfig(enabled=True, period=100))
+    print(render(rep, top_k=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Batched serving example: prefill + greedy decode with a KV cache.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch zamba2-1.2b
+"""
+import argparse
+
+from repro.configs import registry
+from repro.launch.serve import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b", choices=registry.ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=12)
+    a = ap.parse_args()
+    run(a.arch, smoke=True, batch=a.batch, prompt_len=a.prompt_len, gen=a.gen)
+
+
+if __name__ == "__main__":
+    main()

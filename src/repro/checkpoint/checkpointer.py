@@ -1,0 +1,134 @@
+"""Sharded, atomic, async-capable checkpointing.
+
+Layout: ``<dir>/step_<N>/`` holding one ``.npy`` per pytree leaf plus an
+``index.json`` with key-paths, shapes, dtypes and the step. Writes land in
+``step_<N>.tmp`` and are renamed atomically, so a crash mid-write never
+corrupts the latest checkpoint. ``save_async`` runs the serialization on a
+background thread (the train loop only blocks on the previous write).
+
+Restore is mesh-agnostic: leaves are loaded as full arrays and re-placed
+with whatever shardings the *current* mesh prescribes — this is the
+elastic-restart path (repro.checkpoint.elastic).
+"""
+from __future__ import annotations
+
+import json
+import re
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(k): v for k, v in flat}
+
+
+def _sanitize(key: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]", "_", key)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any) -> Path:
+        self.wait()
+        return self._save_sync(step, jax.device_get(tree))
+
+    def save_async(self, step: int, tree: Any) -> None:
+        self.wait()
+        host_tree = jax.device_get(tree)      # snapshot before returning
+        self._thread = threading.Thread(
+            target=self._save_sync, args=(step, host_tree), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _save_sync(self, step: int, host_tree: Any) -> Path:
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat = _flatten(host_tree)
+        index: Dict[str, Any] = {"step": step, "leaves": {}}
+        for key, val in flat.items():
+            arr = np.asarray(val)
+            true_dtype = str(arr.dtype)
+            if arr.dtype.kind == "V" or "bfloat16" in true_dtype \
+                    or "float8" in true_dtype:
+                # numpy can't round-trip ml_dtypes: store widened, record
+                # the true dtype (bf16->f32 is lossless)
+                arr = arr.astype(np.float32)
+            fname = _sanitize(key) + ".npy"
+            np.save(tmp / fname, arr)
+            index["leaves"][key] = {"file": fname, "shape": list(arr.shape),
+                                    "dtype": true_dtype}
+        (tmp / "index.json").write_text(json.dumps(index))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)                      # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "index.json").exists():
+                continue
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of `template`. If `shardings` is a
+        matching tree of NamedSharding, leaves are placed sharded (elastic:
+        works for any mesh, not just the one that wrote the checkpoint)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self.dir / f"step_{step:08d}"
+        index = json.loads((path / "index.json").read_text())
+
+        flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+        shard_flat = (jax.tree_util.tree_flatten(shardings)[0]
+                      if shardings is not None else [None] * len(flat_t))
+        leaves = []
+        for (kp, tmpl), shd in zip(flat_t, shard_flat):
+            key = jax.tree_util.keystr(kp)
+            meta = index["leaves"].get(key)
+            if meta is None:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = np.load(path / meta["file"])
+            if list(arr.shape) != list(tmpl.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                    f"template {tmpl.shape}")
+            if shd is not None:
+                leaves.append(jax.device_put(arr, shd))
+            else:
+                leaves.append(jax.numpy.asarray(arr, dtype=tmpl.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,37 @@
+"""Elastic restart: resume a checkpoint onto a *different* mesh.
+
+Checkpoint leaves are stored as full (unsharded) arrays, so restoring onto
+a grown or shrunk device set is just re-placement with the new mesh's
+shardings. The only real decision is rebuilding the mesh from however many
+devices survived — ``launch.mesh.make_elastic_mesh`` — and recomputing the
+strategy's specs against it. Data order is preserved because the synthetic
+pipeline is a pure function of (seed, step).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.launch.mesh import make_elastic_mesh
+from repro.sharding.rules import make_strategy
+from repro.train import state as TS
+
+
+def resume_elastic(ckpt_dir: str, model, strategy_name: str = "dp_tp",
+                   num_devices: Optional[int] = None,
+                   step: Optional[int] = None):
+    """Returns (mesh, strategy, restored TrainState)."""
+    n = num_devices or len(jax.devices())
+    mesh = make_elastic_mesh(n)
+    strat = make_strategy(strategy_name, mesh)
+    specs = TS.state_specs(model, strat)
+    shardings = jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    template = TS.abstract(model)
+    ckpt = Checkpointer(ckpt_dir)
+    with mesh:
+        state = ckpt.restore(template, step=step, shardings=shardings)
+    return mesh, strat, state

@@ -1,0 +1,18 @@
+"""starcoder2-7b [dense] — GQA, RoPE, plain-GELU MLP [arXiv:2402.19173]."""
+from repro.configs.base import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-7b",
+        family="dense",
+        num_layers=32,
+        d_model=4608,
+        num_heads=36,
+        num_kv_heads=4,
+        head_dim=128,
+        d_ff=18432,
+        vocab_size=49152,
+        gated_mlp=False,           # starcoder2 uses a plain MLP (gelu)
+        rope_theta=1e5,
+    )

@@ -1,0 +1,15 @@
+"""JXPerf-JAX: the paper's contribution as a composable module.
+
+Three detection tiers (DESIGN.md §2):
+  Tier 1  runtime value profiler      (interpreter.profile_fn)
+  Tier 2  compiled-HLO waste analysis (hlo_waste.analyze_waste)
+  Tier 3  training-loop detectors     (detectors.TrainingDetectors)
+plus the reservoir watchpoint manager (reservoir.ReservoirWatchpoints)
+and the trip-count-correct HLO cost model (hlo_cost.HloCostModel).
+"""
+from repro.core.reservoir import ReservoirWatchpoints, Watchpoint  # noqa: F401
+from repro.core.interpreter import JxInterpreter, profile_fn, Report  # noqa: F401
+from repro.core.detectors import TrainingDetectors, Tier3Report  # noqa: F401
+from repro.core.hlo_waste import analyze_waste, WasteReport  # noqa: F401
+from repro.core.hlo_cost import HloCostModel  # noqa: F401
+from repro.core.report import merge_reports, render  # noqa: F401

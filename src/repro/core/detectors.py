@@ -1,0 +1,136 @@
+"""Tier-3: training-loop waste detectors (DESIGN.md §2) — the production
+always-on mode. Watches the *framework's own* memory traffic at step
+granularity with the same reservoir-sampled watchpoint discipline:
+
+  silent parameter stores — a parameter leaf whose post-optimizer value
+      equals its pre-step value within tolerance (frozen/dead subnetwork,
+      zero grads): the optimizer "stored the same value" (Def. 2);
+  dead gradient stores    — gradient leaves that are (near-)all-zero: the
+      backward pass produced bytes nobody needed (Def. 1 flavour);
+  silent data loads       — repeated identical batches from the pipeline
+      (content hash), Def. 3 at the input boundary.
+
+The value comparison runs on-device via the silent_compare Pallas kernel
+(2 reads/element — roofline-minimal), so the per-step overhead is bounded
+by the sampled leaf set, mirroring the paper's 7%-overhead philosophy.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ProfilerConfig
+from repro.core.reservoir import ReservoirWatchpoints, Watchpoint
+from repro.kernels import ops
+
+
+@dataclass
+class StepFinding:
+    step: int
+    kind: str              # silent_param_store | dead_grad_store | silent_data_load
+    path: str
+    fraction: float
+
+
+@dataclass
+class Tier3Report:
+    findings: List[StepFinding] = field(default_factory=list)
+    checked: Dict[str, int] = field(default_factory=dict)
+    flagged: Dict[str, int] = field(default_factory=dict)
+
+    def fractions(self) -> Dict[str, float]:
+        return {k: self.flagged.get(k, 0) / v
+                for k, v in self.checked.items() if v}
+
+    def top(self, k: int = 10) -> List[StepFinding]:
+        return sorted(self.findings, key=lambda f: -f.fraction)[:k]
+
+
+def _leaf_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(k), v) for k, v in flat]
+
+
+class TrainingDetectors:
+    """Attach to a training loop; call on_step each step."""
+
+    def __init__(self, cfg: Optional[ProfilerConfig] = None,
+                 leaves_per_step: int = 4):
+        self.cfg = cfg or ProfilerConfig(enabled=True)
+        self.tol = self.cfg.fp_tolerance
+        self.leaves_per_step = leaves_per_step
+        self.wp = ReservoirWatchpoints(self.cfg.num_watchpoints,
+                                       self.cfg.seed)
+        self.rng = np.random.RandomState(self.cfg.seed)
+        self.report = Tier3Report()
+        self._batch_hashes: Dict[str, int] = {}
+
+    # ------------------------------------------------------------------
+    def on_step(self, step: int, params_before, params_after,
+                grads=None) -> List[StepFinding]:
+        """Sample leaves; compare watched leaves before/after (Def. 2)."""
+        out: List[StepFinding] = []
+        before = dict(_leaf_paths(params_before))
+        after = dict(_leaf_paths(params_after))
+
+        # traps: previously armed watchpoints observe this step's store
+        for wp in list(self.wp.armed()):
+            path = wp.meta
+            if path in after:
+                frac = float(ops.silent_fraction(before[path], after[path],
+                                                 tol=self.tol))
+                self._bump("silent_param_store", frac > 0.99)
+                if frac > 0.99:
+                    f = StepFinding(step, "silent_param_store", path, frac)
+                    self.report.findings.append(f)
+                    out.append(f)
+            self.wp.disarm(wp)
+
+        # arm new watchpoints on sampled leaves (reservoir discipline)
+        paths = list(after)
+        for _ in range(min(self.leaves_per_step, len(paths))):
+            p = paths[self.rng.randint(len(paths))]
+            self.wp.on_sample(Watchpoint(
+                address=hash(p) & 0x7FFFFFFF, offset=0, size=4,
+                value=None, context=(p,), trap_type="W_TRAP", meta=p))
+
+        # dead gradient stores (value-agnostic: all-zero grad leaves)
+        if grads is not None:
+            gleaves = _leaf_paths(grads)
+            for _ in range(min(self.leaves_per_step, len(gleaves))):
+                p, g = gleaves[self.rng.randint(len(gleaves))]
+                zero_frac = float(ops.silent_fraction(
+                    g, jax.numpy.zeros_like(g), tol=0.0))
+                dead = zero_frac > 0.99
+                self._bump("dead_grad_store", dead)
+                if dead:
+                    f = StepFinding(step, "dead_grad_store", p, zero_frac)
+                    self.report.findings.append(f)
+                    out.append(f)
+        return out
+
+    # ------------------------------------------------------------------
+    def on_batch(self, step: int, batch) -> List[StepFinding]:
+        """Silent data loads: identical batch content re-delivered."""
+        out = []
+        for path, leaf in _leaf_paths(batch):
+            h = hashlib.blake2b(np.asarray(leaf).tobytes(),
+                                digest_size=8).hexdigest()
+            key = f"{path}:{h}"
+            dup = key in self._batch_hashes
+            self._bump("silent_data_load", dup)
+            if dup:
+                f = StepFinding(step, "silent_data_load", path, 1.0)
+                self.report.findings.append(f)
+                out.append(f)
+            self._batch_hashes[key] = step
+        return out
+
+    def _bump(self, kind: str, flagged: bool):
+        self.report.checked[kind] = self.report.checked.get(kind, 0) + 1
+        if flagged:
+            self.report.flagged[kind] = self.report.flagged.get(kind, 0) + 1

@@ -1,0 +1,535 @@
+"""HLO-text cost analyzer with correct while-loop trip-count accounting.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each while-loop body
+ONCE — for scan-over-layers models that undercounts flops/bytes/collectives
+by the layer count (verified empirically on the CPU backend). This module
+parses the optimized HLO text into its computation graph and accumulates
+
+    flops          (dot/conv exact from shapes; elementwise ~1/elem)
+    hbm_bytes      (operands + results of top-level instructions)
+    collectives    (per-op wire bytes with ring-model factors)
+
+multiplying every called computation by its call multiplier
+(``known_trip_count`` for while bodies, 1 elsewhere).
+
+It is also the substrate for the Tier-2 JXPerf waste analysis
+(repro.core.hlo_waste): the same parsed representation is scanned for
+redundant collectives / dead stores / remat recompute.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_ARRAY_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_INST_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_SHAPE_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "power",
+    "remainder", "clamp", "sign", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "atan2",
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "logistic",
+                   "expm1", "log-plus-one", "cosine", "sine", "erf", "cbrt"}
+_FREE = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+         "after-all", "partition-id", "replica-id", "iota", "opt-barrier"}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _dims(txt: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _ARRAY_RE.findall(txt):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _nbytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _dims(txt):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _nelems(txt: str) -> int:
+    total = 0
+    for _, dims in _dims(txt):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclass
+class Inst:
+    name: str
+    op: str
+    result_type: str
+    line: str
+    operands: List[str]
+
+
+# ops whose values flow through fused chains without touching HBM on TPU
+# (the "fused-ideal" memory model: bytes are only paid at materialization
+# points — dot/conv/fusion/collective/reduce/parameter/... — which is the
+# roofline-appropriate lower bound and matches Pallas/XLA-TPU fusion).
+_LIGHT = (_ELEMENTWISE | _TRANSCENDENTAL |
+          {"select", "compare", "convert", "broadcast", "reshape",
+           "transpose", "copy", "bitcast", "concatenate", "slice", "pad",
+           "reverse", "iota", "exponential", "rng-bit-generator"})
+
+
+@dataclass
+class Computation:
+    name: str
+    insts: List[Inst] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)   # %name -> type str
+    producers: Dict[str, Inst] = field(default_factory=dict)
+
+    _src_memo: Dict[str, Dict[str, int]] = field(default_factory=dict)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_wire_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    coll_count: float = 0.0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.coll_wire_bytes += other.coll_wire_bytes * mult
+        self.coll_count += other.coll_count * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * mult
+
+
+_OPNAME_RE = re.compile(r"^([a-z][a-z0-9\-]*)\(")
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and line.endswith("{"):
+                cur = Computation(m.group(1))
+                if raw.startswith("ENTRY") or line.startswith("ENTRY"):
+                    entry = cur.name
+                # parameters are declared in the header parens
+                continue
+            continue
+        if line == "}" or line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INST_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # result type = prefix of rhs until the op name token
+        om = re.search(r"\b([a-z][a-z0-9\-]*)\(", rhs)
+        if not om:
+            continue
+        op = om.group(1)
+        result_type = rhs[:om.start()].strip()
+        args = rhs[om.end():]
+        depth = 1
+        j = 0
+        for j, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operand_str = args[:j]
+        operands = re.findall(r"%([\w.\-]+)", operand_str)
+        inst = Inst(name, op, result_type, line, operands)
+        cur.insts.append(inst)
+        cur.shapes[name] = result_type
+        cur.producers[name] = inst
+    return comps, entry
+
+
+def _dot_flops(inst: Inst, comp: Computation) -> float:
+    out_elems = _nelems(inst.result_type)
+    csize = 1
+    m = _CONTRACT_RE.search(inst.line)
+    if m and inst.operands:
+        lhs_type = comp.shapes.get(inst.operands[0], "")
+        d = _dims(lhs_type)
+        if d:
+            dims = d[0][1]
+            for idx in (int(i) for i in m.group(1).split(",") if i):
+                if idx < len(dims):
+                    csize *= dims[idx]
+    return 2.0 * out_elems * csize
+
+
+def _conv_flops(inst: Inst, comp: Computation) -> float:
+    out_elems = _nelems(inst.result_type)
+    if not inst.operands or len(inst.operands) < 2:
+        return 2.0 * out_elems
+    k = _dims(comp.shapes.get(inst.operands[1], ""))
+    kelems = 1
+    if k:
+        for d in k[0][1]:
+            kelems *= d
+        # per output element: kernel spatial x in-channels macs (approx:
+        # kernel elems / out-features)
+        od = _dims(inst.result_type)
+        ofeat = od[0][1][-1] if od and od[0][1] else 1
+        kelems = max(kelems // max(ofeat, 1), 1)
+    return 2.0 * out_elems * kelems
+
+
+def _wire(kind: str, result_bytes: int, n: int) -> float:
+    if kind == "collective-permute":
+        return float(result_bytes)       # full payload, any group size
+    if n <= 1:
+        return 0.0
+    frac = (n - 1) / n
+    if kind == "all-gather":
+        return result_bytes * frac
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * frac
+    if kind == "reduce-scatter":
+        return result_bytes * (n - 1)
+    if kind == "all-to-all":
+        return result_bytes * frac
+    return float(result_bytes)       # collective-permute
+
+
+def _participants(line: str, default: int) -> int:
+    m = _GROUPS_SHAPE_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str, default_participants: int = 1,
+                 scope_zero_hbm: Tuple[str, ...] = ()):
+        """scope_zero_hbm: named_scope substrings whose instructions are
+        known to run inside a Pallas kernel on the TPU target — their HBM
+        traffic is zeroed here and replaced analytically by the caller
+        (see launch.roofline.ideal_attention_bytes)."""
+        self.comps, self.entry = parse_module(hlo_text)
+        self.default_participants = default_participants
+        self.scope_zero_hbm = tuple(scope_zero_hbm)
+        self._memo: Dict[str, Cost] = {}
+        self._light_memo: Dict[str, bool] = {}
+
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        self._memo[comp_name] = Cost()      # cycle guard
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return self._memo[comp_name]
+        total = Cost()
+        for inst in comp.insts:
+            total.add(self._inst_cost(inst, comp))
+        self._memo[comp_name] = total
+        return total
+
+    def _is_light_fusion(self, comp_name: str) -> bool:
+        """A fusion whose body is entirely elementwise/data-movement melts
+        into its neighbours on TPU (kLoop chains) — treat as fuse-through."""
+        if comp_name in self._light_memo:
+            return self._light_memo[comp_name]
+        comp = self.comps.get(comp_name)
+        ok = comp is not None
+        if ok:
+            for inst in comp.insts:
+                if inst.op in _LIGHT or inst.op in _FREE or inst.op == "reduce":
+                    continue
+                if inst.op in ("fusion", "call"):
+                    cal = _CALL_RE.search(inst.line)
+                    if cal and self._is_light_fusion(cal.group(1)):
+                        continue
+                ok = False
+                break
+        self._light_memo[comp_name] = ok
+        return ok
+
+    def _is_slice_fusion(self, comp_name: str) -> bool:
+        """Fusion of slices/converts only: window-sized traffic."""
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return False
+        has_slice = False
+        for inst in comp.insts:
+            if inst.op in ("dynamic-slice",):
+                has_slice = True
+                continue
+            if inst.op in _LIGHT or inst.op in _FREE or inst.op == "reduce":
+                continue
+            return False
+        return has_slice
+
+    def _is_light_inst(self, inst: Inst) -> bool:
+        if inst.op in _LIGHT:
+            return True
+        if inst.op in ("fusion", "call"):
+            cal = _CALL_RE.search(inst.line)
+            if cal:
+                return self._is_light_fusion(cal.group(1))
+        return False
+
+    def _sources(self, comp: Computation, name: str,
+                 _depth: int = 0) -> Dict[str, int]:
+        """Materialized HBM sources feeding symbol `name` (fused-ideal)."""
+        if name in comp._src_memo:
+            return comp._src_memo[name]
+        prod = comp.producers.get(name)
+        if prod is None or _depth > 24:
+            out = {name: _nbytes(comp.shapes.get(name, ""))}
+        elif self._is_light_inst(prod):
+            out = {}
+            for o in prod.operands:
+                out.update(self._sources(comp, o, _depth + 1))
+        else:
+            out = {name: _nbytes(comp.shapes.get(name, ""))}
+        comp._src_memo[name] = out
+        return out
+
+    def _read_bytes(self, inst: Inst, comp: Computation) -> int:
+        seen: Dict[str, int] = {}
+        for o in inst.operands:
+            seen.update(self._sources(comp, o))
+        return sum(seen.values())
+
+    def _inst_cost(self, inst: Inst, comp: Computation) -> Cost:
+        c = self._inst_cost_raw(inst, comp)
+        if c.hbm_bytes and self.scope_zero_hbm and \
+                any(s in inst.line for s in self.scope_zero_hbm):
+            c.hbm_bytes = 0.0
+        return c
+
+    def _inst_cost_raw(self, inst: Inst, comp: Computation) -> Cost:
+        c = Cost()
+        op = inst.op
+        rb = _nbytes(inst.result_type)
+        if op in _FREE:
+            return c
+        if op == "while":
+            trip = 1
+            m = _TRIP_RE.search(inst.line)
+            if m:
+                trip = int(m.group(1))
+            body = _CALL_RE.search(inst.line)
+            if body:
+                c.add(self.cost_of(body.group(1)), trip)
+            cond = _COND_RE.search(inst.line)
+            if cond:
+                c.add(self.cost_of(cond.group(1)), trip)
+            return c
+        if op in ("dynamic-slice", "gather"):
+            # read + write only the sliced window (result)
+            c.hbm_bytes += 2 * rb
+            return c
+        if op == "dynamic-update-slice":
+            # in-place aliasing update: read+write the update operand only
+            ub = (_nbytes(comp.shapes.get(inst.operands[1], ""))
+                  if len(inst.operands) > 1 else rb)
+            c.hbm_bytes += 2 * ub
+            return c
+        if op in ("call", "fusion", "map", "reduce", "reduce-window",
+                  "scatter", "select-and-scatter", "sort", "conditional",
+                  "async-start", "custom-call"):
+            # fusion containing a dynamic-update-slice (plus only light ops)
+            # aliases in place: pay only the update window
+            callee0 = _CALL_RE.search(inst.line)
+            if op == "fusion" and callee0:
+                cal = self.comps.get(callee0.group(1))
+                dus = None
+                windowed = cal is not None
+                if cal:
+                    for ci in cal.insts:
+                        if ci.op == "dynamic-update-slice":
+                            dus = ci
+                        elif ci.op not in _LIGHT and ci.op not in _FREE \
+                                and ci.op != "dynamic-slice":
+                            windowed = False
+                            break
+                if windowed and dus is not None:
+                    ub = (_nbytes(cal.shapes.get(dus.operands[1], ""))
+                          if len(dus.operands) > 1 else rb)
+                    c.hbm_bytes += 2 * ub
+                    c.add(self._fused_flops(callee0.group(1), inst))
+                    return c
+            if op == "fusion" and callee0 and \
+                    self._is_slice_fusion(callee0.group(1)):
+                # slice/convert pipelines read+write the window only
+                c.hbm_bytes += 2 * rb
+                c.add(self._fused_flops(callee0.group(1), inst))
+                return c
+            if not self._is_light_inst(inst):
+                c.hbm_bytes += rb + self._read_bytes(inst, comp)
+            callee = _CALL_RE.search(inst.line)
+            if callee and callee.group(1) in self.comps:
+                c.add(self._fused_flops(callee.group(1), inst))
+            if op in ("reduce", "sort", "scatter"):
+                c.flops += _nelems(inst.result_type)
+            return c
+        for kind in _COLLECTIVES:
+            if op == kind or op == kind + "-start":
+                n = _participants(inst.line, self.default_participants)
+                wire = _wire(kind, rb, n)
+                c.coll_wire_bytes += wire
+                c.coll_by_kind[kind] = c.coll_by_kind.get(kind, 0.0) + wire
+                c.coll_count += 1
+                c.hbm_bytes += rb
+                return c
+        if op.endswith("-done") or op.endswith("-update"):
+            return c
+        if op == "dot":
+            c.flops += _dot_flops(inst, comp)
+            c.hbm_bytes += rb + self._read_bytes(inst, comp)
+            return c
+        if op == "convolution":
+            c.flops += _conv_flops(inst, comp)
+            c.hbm_bytes += rb + self._read_bytes(inst, comp)
+            return c
+        # top-level elementwise / data movement: fused-ideal — VPU flops
+        # count, HBM traffic is attributed to materialization points only.
+        if op in _ELEMENTWISE:
+            c.flops += _nelems(inst.result_type)
+        elif op in _TRANSCENDENTAL:
+            c.transcendentals += _nelems(inst.result_type)
+            c.flops += _nelems(inst.result_type)
+        elif op not in _LIGHT:
+            # unknown non-light op: be conservative about memory
+            c.hbm_bytes += rb + self._read_bytes(inst, comp)
+        return c
+
+    def _fused_flops(self, comp_name: str, call_inst: Inst) -> Cost:
+        """flops inside a fused computation (no HBM bytes for internals)."""
+        c = Cost()
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return c
+        for inst in comp.insts:
+            if inst.op == "dot":
+                c.flops += _dot_flops(inst, comp)
+            elif inst.op == "convolution":
+                c.flops += _conv_flops(inst, comp)
+            elif inst.op in _ELEMENTWISE:
+                c.flops += _nelems(inst.result_type)
+            elif inst.op in _TRANSCENDENTAL:
+                n = _nelems(inst.result_type)
+                c.flops += n
+                c.transcendentals += n
+            elif inst.op in ("fusion", "call", "reduce", "map"):
+                callee = _CALL_RE.search(inst.line)
+                if callee and callee.group(1) != comp_name:
+                    c.add(self._fused_flops(callee.group(1), inst))
+                if inst.op == "reduce":
+                    c.flops += _nelems(inst.result_type)
+        return c
+
+    def total(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.cost_of(self.entry)
+
+    # ------------------------------------------------------------------
+    # Attribution: per-instruction costs scaled by effective multiplier
+    # (product of trip counts on the call path) — the provenance view the
+    # Tier-2 waste analysis consumes.
+    # ------------------------------------------------------------------
+    def _multipliers(self) -> Dict[str, float]:
+        mult: Dict[str, float] = {}
+        if self.entry is None:
+            return mult
+        mult[self.entry] = 1.0
+        order = [self.entry]
+        seen = {self.entry}
+        while order:
+            cname = order.pop(0)
+            comp = self.comps.get(cname)
+            if comp is None:
+                continue
+            m = mult[cname]
+            for inst in comp.insts:
+                trip = 1
+                if inst.op == "while":
+                    t = _TRIP_RE.search(inst.line)
+                    trip = int(t.group(1)) if t else 1
+                for cm in _CALL_RE.finditer(inst.line):
+                    callee = cm.group(1)
+                    if callee in self.comps:
+                        mult[callee] = mult.get(callee, 0.0) + m * trip
+                        if callee not in seen:
+                            seen.add(callee)
+                            order.append(callee)
+                cond = _COND_RE.search(inst.line)
+                if cond and cond.group(1) in self.comps:
+                    mult[cond.group(1)] = mult.get(cond.group(1), 0.0) + m * trip
+        return mult
+
+    def attribute(self):
+        """Yield per-instruction cost records with effective multipliers."""
+        mult = self._multipliers()
+        for cname, comp in self.comps.items():
+            m = mult.get(cname, 0.0)
+            if m == 0.0:
+                continue
+            for inst in comp.insts:
+                if inst.op in _FREE or inst.op == "while":
+                    continue
+                c = self._inst_cost(inst, comp)
+                if c.flops == 0 and c.hbm_bytes == 0 and c.coll_wire_bytes == 0:
+                    continue
+                meta = re.search(r'op_name="([^"]+)"', inst.line)
+                yield {
+                    "computation": cname, "name": inst.name, "op": inst.op,
+                    "mult": m, "flops": c.flops * m,
+                    "hbm_bytes": c.hbm_bytes * m,
+                    "wire_bytes": c.coll_wire_bytes * m,
+                    "result_type": inst.result_type.split("{")[0].strip(),
+                    "op_name": meta.group(1) if meta else "",
+                }
+
+    def top(self, key: str = "flops", k: int = 15):
+        recs = list(self.attribute())
+        recs.sort(key=lambda r: -r[key])
+        return recs[:k]
+
+
+def analyze(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).total()

@@ -1,0 +1,151 @@
+"""Tier-2: static waste analysis of compiled HLO (DESIGN.md §2).
+
+The TPU analogue of JXPerf inspecting JITted machine code: we scan the
+*optimized, partitioned* HLO of a step for the paper's waste categories:
+
+  silent collective loads  — the same source tensor all-gathered /
+                             broadcast more than once without intervening
+                             mutation (same operand fingerprint);
+  recompute (dead work)    — duplicate op fingerprints (op, operand
+                             shapes, result shape) executed more than once
+                             (remat-inserted or CSE-missed);
+  reshard copies           — large copy/transpose ops inserted by SPMD
+                             ("involuntary full rematerialization");
+  padding waste            — dots whose operand dims exceed the logical
+                             shapes (implicit GSPMD padding).
+
+Built on the trip-count-correct cost model (repro.core.hlo_cost); every
+finding carries its effective multiplier and op_name provenance, i.e. the
+same two-party attribution discipline as the runtime tiers.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+from repro.core.hlo_cost import (HloCostModel, _CALL_RE, _COLLECTIVES,
+                                 _nbytes)
+
+
+@dataclass
+class WasteReport:
+    redundant_collectives: List[Dict] = field(default_factory=list)
+    recompute: List[Dict] = field(default_factory=list)
+    reshard_copies: List[Dict] = field(default_factory=list)
+    totals: Dict[str, float] = field(default_factory=dict)
+
+    def summary(self) -> str:
+        out = ["== JXPerf-JAX Tier-2 (compiled HLO waste) =="]
+        t = self.totals
+        out.append(f"  redundant collective wire bytes/dev: "
+                   f"{t.get('redundant_collective_bytes', 0)/1e9:.3f} GB")
+        out.append(f"  duplicate-compute flops/dev:          "
+                   f"{t.get('recompute_flops', 0)/1e12:.3f} TF")
+        out.append(f"  reshard copy bytes/dev:               "
+                   f"{t.get('reshard_bytes', 0)/1e9:.3f} GB")
+        for r in self.redundant_collectives[:5]:
+            out.append(f"  [coll x{r['copies']}] {r['kind']} "
+                       f"{r['shape']} wire {r['wire_bytes']/1e9:.2f} GB | {r['op_name'][-60:]}")
+        for r in self.recompute[:5]:
+            out.append(f"  [dup x{r['copies']}] {r['fingerprint'][:60]} "
+                       f"{r['flops']/1e12:.2f} TF")
+        return "\n".join(out)
+
+
+def analyze_waste(hlo_text: str, top_k: int = 20) -> WasteReport:
+    cm = HloCostModel(hlo_text)
+    mult = cm._multipliers()
+    rep = WasteReport()
+
+    # --- redundant collectives: same (kind, operand fingerprint) ---------
+    seen: Dict[tuple, List] = defaultdict(list)
+    for cname, comp in cm.comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for inst in comp.insts:
+            kind = None
+            for k in _COLLECTIVES:
+                if inst.op == k or inst.op == k + "-start":
+                    kind = k
+                    break
+            if kind is None:
+                continue
+            # fingerprint the collected source: operand's producer op+type
+            src = inst.operands[0] if inst.operands else ""
+            prod = comp.producers.get(src)
+            fp = (kind, comp.shapes.get(src, "").split("{")[0],
+                  prod.op if prod else "arg")
+            c = cm._inst_cost(inst, comp)
+            meta = re.search(r'op_name="([^"]+)"', inst.line)
+            seen[fp].append({
+                "kind": kind, "shape": inst.result_type.split("{")[0],
+                "wire_bytes": c.coll_wire_bytes * m, "mult": m,
+                "op_name": meta.group(1) if meta else "",
+            })
+    red_total = 0.0
+    for fp, items in seen.items():
+        if len(items) > 1 and items[0]["wire_bytes"] > 0:
+            extra = sum(it["wire_bytes"] for it in items[1:])
+            red_total += extra
+            rep.redundant_collectives.append({
+                "kind": fp[0], "shape": items[0]["shape"],
+                "copies": len(items), "wire_bytes": extra,
+                "op_name": items[0]["op_name"],
+            })
+    rep.redundant_collectives.sort(key=lambda r: -r["wire_bytes"])
+    rep.redundant_collectives = rep.redundant_collectives[:top_k]
+
+    # --- duplicate compute (remat / missed CSE) --------------------------
+    dup: Dict[str, List] = defaultdict(list)
+    for cname, comp in cm.comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for inst in comp.insts:
+            if inst.op != "dot":
+                continue
+            opshapes = ",".join(comp.shapes.get(o, "?").split("{")[0]
+                                for o in inst.operands)
+            fp = f"dot {inst.result_type.split('{')[0]} <- {opshapes}"
+            c = cm._inst_cost(inst, comp)
+            dup[fp].append(c.flops * m)
+    rec_total = 0.0
+    for fp, fl in dup.items():
+        if len(fl) > 1:
+            extra = sum(sorted(fl)[:-1])
+            rec_total += extra
+            rep.recompute.append({"fingerprint": fp, "copies": len(fl),
+                                  "flops": extra})
+    rep.recompute.sort(key=lambda r: -r["flops"])
+    rep.recompute = rep.recompute[:top_k]
+
+    # --- reshard copies ---------------------------------------------------
+    resh_total = 0.0
+    for cname, comp in cm.comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for inst in comp.insts:
+            if inst.op not in ("copy", "transpose"):
+                continue
+            b = _nbytes(inst.result_type)
+            if b * m < 64e6:
+                continue
+            resh_total += 2 * b * m
+            meta = re.search(r'op_name="([^"]+)"', inst.line)
+            rep.reshard_copies.append({
+                "op": inst.op, "shape": inst.result_type.split("{")[0],
+                "bytes": 2 * b * m,
+                "op_name": meta.group(1) if meta else ""})
+    rep.reshard_copies.sort(key=lambda r: -r["bytes"])
+    rep.reshard_copies = rep.reshard_copies[:top_k]
+
+    rep.totals = {
+        "redundant_collective_bytes": red_total,
+        "recompute_flops": rec_total,
+        "reshard_bytes": resh_total,
+    }
+    return rep

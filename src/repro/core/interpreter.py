@@ -1,0 +1,398 @@
+"""Tier-1 runtime profiler: dead stores / silent stores / silent loads in
+an executing JAX program (paper §4-§5, adapted per DESIGN.md §2).
+
+The program's jaxpr is interpreted op by op against a modeled flat address
+space: every equation output is a STORE over a buffer placed by a reusing
+allocator (buffers free at last use, addresses recycle — the moral
+equivalent of the mutable heap JXPerf watches), every operand read is a
+LOAD. Memory events stream past a PMU-style sampler (period P); sampled
+events arm software watchpoints managed by the paper's reservoir scheme;
+the next access to a watched location is the trap, classified per
+Definitions 1-3:
+
+  dead store    S1;S2 stores, no intervening load         (value-agnostic)
+  silent store  S2 stores the value S1 stored             (fp tol, def 1%)
+  silent load   L2 loads the value L1 loaded
+
+Attribution is a ⟨C1,C2⟩ pair of full calling contexts from jaxpr
+source_info. Epochs: each profiled call is one epoch (jit-step boundary ≡
+GC epoch: watchpoints never cross it). Scan/while/cond/pjit/remat bodies
+are interpreted recursively with buffer identity preserved across
+iterations, so a linear search in a scan traps exactly like the paper's
+``contains()`` case, and loop-invariant recomputation writes the same
+values to the same recycled addresses like the paper's NPB-IS case.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+try:
+    from jax.extend.core import Literal
+except ImportError:  # pragma: no cover
+    from jax.core import Literal
+
+from repro.configs.base import ProfilerConfig
+from repro.core.context import PairTable, context_of_eqn
+from repro.core.reservoir import ReservoirWatchpoints, Watchpoint
+
+
+# ----------------------------------------------------------------------
+class Allocator:
+    """Flat address space with size-class recycling (heap analogue)."""
+
+    def __init__(self):
+        self.next = 0
+        self.free_lists: Dict[int, List[int]] = {}
+
+    def alloc(self, nelems: int) -> int:
+        fl = self.free_lists.get(nelems)
+        if fl:
+            return fl.pop()
+        addr = self.next
+        self.next += max(nelems, 1)
+        return addr
+
+    def free(self, addr: int, nelems: int) -> None:
+        self.free_lists.setdefault(nelems, []).append(addr)
+
+
+@dataclass
+class Buffer:
+    addr: int
+    nelems: int
+    itemsize: int
+
+
+@dataclass
+class Report:
+    dead_stores: PairTable = field(default_factory=PairTable)
+    silent_stores: PairTable = field(default_factory=PairTable)
+    silent_loads: PairTable = field(default_factory=PairTable)
+    not_wasteful: Dict[str, int] = field(default_factory=dict)
+    total_store_events: int = 0
+    total_load_events: int = 0
+    total_store_bytes: float = 0.0
+    total_load_bytes: float = 0.0
+    sampling_period: int = 1
+    watchpoint_stats: Dict[str, Any] = field(default_factory=dict)
+
+    def _frac(self, table: PairTable, kind: str) -> float:
+        hits = table.total_count
+        misses = self.not_wasteful.get(kind, 0)
+        checked = hits + misses
+        if not checked:
+            return 0.0
+        # fraction of *checked* accesses that were wasteful — the sampled
+        # estimator of Eq. (1)'s byte fractions (uniform reservoir makes
+        # checked accesses an unbiased sample of all accesses)
+        return hits / checked
+
+    def fractions(self) -> Dict[str, float]:
+        return {
+            "dead_store": self._frac(self.dead_stores, "dead_store"),
+            "silent_store": self._frac(self.silent_stores, "silent_store"),
+            "silent_load": self._frac(self.silent_loads, "silent_load"),
+        }
+
+    def merge(self, other: "Report") -> "Report":
+        self.dead_stores.merge(other.dead_stores)
+        self.silent_stores.merge(other.silent_stores)
+        self.silent_loads.merge(other.silent_loads)
+        for k, v in other.not_wasteful.items():
+            self.not_wasteful[k] = self.not_wasteful.get(k, 0) + v
+        self.total_store_events += other.total_store_events
+        self.total_load_events += other.total_load_events
+        self.total_store_bytes += other.total_store_bytes
+        self.total_load_bytes += other.total_load_bytes
+        return self
+
+
+_CONTROL_PRIMS = {"scan", "while", "cond"}
+
+
+def _inner_closed_jaxpr(eqn):
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if key in eqn.params:
+            return eqn.params[key]
+    return None
+
+
+class JxInterpreter:
+    """Profile fn(*args) and produce a :class:`Report`."""
+
+    def __init__(self, cfg: Optional[ProfilerConfig] = None):
+        self.cfg = cfg or ProfilerConfig(enabled=True)
+        self.period = max(1, self.cfg.period)
+        self.tol = self.cfg.fp_tolerance
+        self.detect = set(self.cfg.detect)
+        self.rng = np.random.RandomState(self.cfg.seed)
+        self.report = Report(sampling_period=self.period)
+
+    def _reset_epoch(self):
+        self.alloc = Allocator()
+        self.wp = {
+            "store": ReservoirWatchpoints(self.cfg.num_watchpoints, self.cfg.seed),
+            "load": ReservoirWatchpoints(self.cfg.num_watchpoints, self.cfg.seed + 1),
+        }
+        self.next_sample = self._draw_gap()
+
+    def _draw_gap(self) -> int:
+        return max(1, int(self.rng.geometric(1.0 / self.period)))
+
+    # ------------------------------------------------------------------
+    def profile(self, fn, *args, epochs: int = 1) -> Report:
+        closed = jax.make_jaxpr(fn)(*args)
+        flat, _ = jax.tree_util.tree_flatten(args)
+        flat = [np.asarray(x) for x in flat]
+        for _ in range(epochs):
+            self._reset_epoch()                    # GC-epoch semantics
+            self._eval_jaxpr(closed.jaxpr, closed.consts, flat, None)
+        self.report.watchpoint_stats = {
+            k: dict(v.stats) for k, v in self.wp.items()}
+        return self.report
+
+    # ------------------------------------------------------------------
+    def _new_buffer(self, val: np.ndarray) -> Buffer:
+        return Buffer(self.alloc.alloc(int(val.size)), int(val.size),
+                      int(val.dtype.itemsize))
+
+    def _eval_jaxpr(self, jaxpr, consts, args, arg_bufs):
+        """Interpret one (sub)jaxpr. arg_bufs: parallel Buffer list for
+        `args` (None entries -> fresh input buffers owned by this frame)."""
+        env: Dict[Any, np.ndarray] = {}
+        bufs: Dict[Any, Buffer] = {}
+        owned: List[Buffer] = []
+
+        def read_val(v):
+            return np.asarray(v.val) if isinstance(v, Literal) else env[v]
+
+        def read_buf(v):
+            return None if isinstance(v, Literal) else bufs.get(v)
+
+        if arg_bufs is None:
+            arg_bufs = [None] * len(args)
+
+        for cv, cval in zip(jaxpr.constvars, consts):
+            val = np.asarray(cval)
+            env[cv] = val
+            b = self._new_buffer(val)
+            bufs[cv] = b
+            owned.append(b)
+        for iv, val, b in zip(jaxpr.invars, args, arg_bufs):
+            env[iv] = np.asarray(val)
+            if b is None:
+                b = self._new_buffer(env[iv])
+                owned.append(b)
+            bufs[iv] = b
+
+        # last-use positions for address recycling within this frame
+        last_use: Dict[Any, int] = {}
+        for i, eqn in enumerate(jaxpr.eqns):
+            for v in eqn.invars:
+                if not isinstance(v, Literal):
+                    last_use[v] = i
+        out_set = {v for v in jaxpr.outvars if not isinstance(v, Literal)}
+
+        for i, eqn in enumerate(jaxpr.eqns):
+            ctx = context_of_eqn(eqn)
+            invals = [read_val(v) for v in eqn.invars]
+            inbufs = [read_buf(v) for v in eqn.invars]
+            is_call = (eqn.primitive.name in _CONTROL_PRIMS
+                       or _inner_closed_jaxpr(eqn) is not None)
+            if not is_call:
+                for v, b in zip(eqn.invars, inbufs):
+                    if b is not None:
+                        self._load_event(b, read_val(v), ctx)
+
+            outvals = self._run_eqn(eqn, invals, inbufs)
+            if not isinstance(outvals, (list, tuple)):
+                outvals = [outvals]
+            for ov, val in zip(eqn.outvars, outvals):
+                val = np.asarray(val)
+                env[ov] = val
+                b = self._new_buffer(val)
+                bufs[ov] = b
+                owned.append(b)
+                if not is_call:
+                    self._store_event(b, val, ctx)
+
+            # recycle frame-local dead buffers
+            for v in list(bufs):
+                if last_use.get(v, -1) <= i and v not in out_set:
+                    b = bufs.pop(v)
+                    if b in owned:
+                        self.alloc.free(b.addr, b.nelems)
+                        owned.remove(b)
+
+        outs = [read_val(v) for v in jaxpr.outvars]
+        for b in owned:                        # frame exit: release
+            self.alloc.free(b.addr, b.nelems)
+        return outs
+
+    # ------------------------------------------------------------------
+    def _run_eqn(self, eqn, invals, inbufs):
+        prim = eqn.primitive
+        name = prim.name
+        if name == "scan":
+            return self._run_scan(eqn, invals, inbufs)
+        if name == "while":
+            return self._run_while(eqn, invals, inbufs)
+        if name == "cond":
+            return self._run_cond(eqn, invals, inbufs)
+        inner = _inner_closed_jaxpr(eqn)
+        if inner is not None:
+            cj = inner
+            if hasattr(cj, "jaxpr"):
+                return self._eval_jaxpr(cj.jaxpr, cj.consts, invals, inbufs)
+            return self._eval_jaxpr(cj, [], invals, inbufs)
+        out = prim.bind(*invals, **eqn.params)
+        return out if prim.multiple_results else [out]
+
+    def _run_scan(self, eqn, invals, inbufs):
+        p = eqn.params
+        cj = p["jaxpr"]
+        nc, ncar, length = p["num_consts"], p["num_carry"], p["length"]
+        consts, cbufs = invals[:nc], inbufs[:nc]
+        carry = [np.asarray(x) for x in invals[nc:nc + ncar]]
+        xs = invals[nc + ncar:]
+        ys_acc: List[List[np.ndarray]] = []
+        idxs = (range(length - 1, -1, -1) if p.get("reverse")
+                else range(length))
+        for t in idxs:
+            xt = [np.asarray(x)[t] for x in xs]
+            args = list(consts) + carry + xt
+            bufs = list(cbufs) + [None] * (ncar + len(xt))
+            outs = self._eval_jaxpr(cj.jaxpr, cj.consts, args, bufs)
+            carry = [np.asarray(o) for o in outs[:ncar]]
+            ys_acc.append(outs[ncar:])
+        if p.get("reverse"):
+            ys_acc.reverse()
+        ys = []
+        if ys_acc and ys_acc[0]:
+            for j in range(len(ys_acc[0])):
+                ys.append(np.stack([np.asarray(step[j]) for step in ys_acc]))
+        return list(carry) + ys
+
+    def _run_while(self, eqn, invals, inbufs):
+        p = eqn.params
+        cj, bj = p["cond_jaxpr"], p["body_jaxpr"]
+        cn, bn = p["cond_nconsts"], p["body_nconsts"]
+        cconsts, ccb = invals[:cn], inbufs[:cn]
+        bconsts, bcb = invals[cn:cn + bn], inbufs[cn:cn + bn]
+        state = [np.asarray(x) for x in invals[cn + bn:]]
+        iters = 0
+        while True:
+            pred = self._eval_jaxpr(cj.jaxpr, cj.consts,
+                                    list(cconsts) + state,
+                                    list(ccb) + [None] * len(state))[0]
+            if not bool(np.asarray(pred)):
+                break
+            state = [np.asarray(o) for o in self._eval_jaxpr(
+                bj.jaxpr, bj.consts, list(bconsts) + state,
+                list(bcb) + [None] * len(state))]
+            iters += 1
+            if iters > 100000:
+                raise RuntimeError("while loop runaway in interpreter")
+        return state
+
+    def _run_cond(self, eqn, invals, inbufs):
+        branches = eqn.params["branches"]
+        idx = int(np.asarray(invals[0]))
+        idx = max(0, min(idx, len(branches) - 1))
+        br = branches[idx]
+        return self._eval_jaxpr(br.jaxpr, br.consts, invals[1:], inbufs[1:])
+
+    # ------------------------------------------------------------------
+    # Memory events
+    # ------------------------------------------------------------------
+    def _advance(self, n: int) -> List[int]:
+        hits = []
+        pos = 0
+        remaining = n
+        while self.next_sample <= remaining:
+            pos += self.next_sample
+            hits.append(pos - 1)
+            remaining -= self.next_sample
+            self.next_sample = self._draw_gap()
+        self.next_sample -= remaining
+        return hits
+
+    @staticmethod
+    def _value_at(val: np.ndarray, offset: int):
+        flat = val.reshape(-1)
+        return flat[min(offset, flat.size - 1)]
+
+    def _equal(self, a, b) -> bool:
+        a = np.asarray(a)
+        b = np.asarray(b)
+        if a.dtype.kind in "fc":
+            fa, fb = float(np.real(a)), float(np.real(b))
+            if math.isnan(fa) or math.isnan(fb):
+                return False
+            return abs(fa - fb) <= self.tol * abs(fa)
+        return bool(a == b)
+
+    def _store_event(self, buf: Buffer, val: np.ndarray, ctx):
+        self.report.total_store_events += buf.nelems
+        self.report.total_store_bytes += buf.nelems * buf.itemsize
+        self._check_traps("store", buf, val, ctx)
+        for off in self._advance(buf.nelems):
+            if "dead_store" in self.detect:
+                self.wp["store"].on_sample(Watchpoint(
+                    address=buf.addr, offset=off, size=buf.itemsize,
+                    value=None, context=ctx, trap_type="RW_TRAP",
+                    meta="dead_store"))
+            if "silent_store" in self.detect:
+                self.wp["store"].on_sample(Watchpoint(
+                    address=buf.addr, offset=off, size=buf.itemsize,
+                    value=self._value_at(val, off), context=ctx,
+                    trap_type="W_TRAP", meta="silent_store"))
+
+    def _load_event(self, buf: Buffer, val: np.ndarray, ctx):
+        self.report.total_load_events += buf.nelems
+        self.report.total_load_bytes += buf.nelems * buf.itemsize
+        self._check_traps("load", buf, val, ctx)
+        if "silent_load" in self.detect:
+            for off in self._advance(buf.nelems):
+                self.wp["load"].on_sample(Watchpoint(
+                    address=buf.addr, offset=off, size=buf.itemsize,
+                    value=self._value_at(val, off), context=ctx,
+                    trap_type="RW_TRAP", meta="silent_load"))
+
+    def _check_traps(self, access: str, buf: Buffer, val: np.ndarray, ctx):
+        rep = self.report
+        for wp in self.wp["store"].matching(
+                lambda w: w.address == buf.addr and w.offset < buf.nelems):
+            if wp.meta == "dead_store":
+                if access == "store":
+                    rep.dead_stores.add(wp.context, ctx, wp.size)
+                else:
+                    rep.not_wasteful["dead_store"] = \
+                        rep.not_wasteful.get("dead_store", 0) + 1
+                self.wp["store"].disarm(wp)
+            elif wp.meta == "silent_store" and access == "store":
+                if self._equal(wp.value, self._value_at(val, wp.offset)):
+                    rep.silent_stores.add(wp.context, ctx, wp.size)
+                else:
+                    rep.not_wasteful["silent_store"] = \
+                        rep.not_wasteful.get("silent_store", 0) + 1
+                self.wp["store"].disarm(wp)
+        for wp in self.wp["load"].matching(
+                lambda w: w.address == buf.addr and w.offset < buf.nelems):
+            if access == "load":
+                if self._equal(wp.value, self._value_at(val, wp.offset)):
+                    rep.silent_loads.add(wp.context, ctx, wp.size)
+                else:
+                    rep.not_wasteful["silent_load"] = \
+                        rep.not_wasteful.get("silent_load", 0) + 1
+            self.wp["load"].disarm(wp)
+
+
+def profile_fn(fn, *args, cfg: Optional[ProfilerConfig] = None,
+               epochs: int = 1) -> Report:
+    """Profile fn(*args) with JXPerf-JAX Tier-1."""
+    return JxInterpreter(cfg).profile(fn, *args, epochs=epochs)

@@ -1,0 +1,37 @@
+"""Post-mortem profile rendering and cross-shard merging (paper §5.6).
+
+Per-device/per-process Tier-1 reports merge with the paper's rule: pairs
+coalesce iff both calling contexts match; metrics aggregate.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+from repro.core.context import fmt_context
+from repro.core.interpreter import Report
+
+
+def merge_reports(reports: Iterable[Report]) -> Report:
+    it = iter(reports)
+    first = next(it)
+    for r in it:
+        first.merge(r)
+    return first
+
+
+def render(report: Report, top_k: int = 5) -> str:
+    fr = report.fractions()
+    lines: List[str] = []
+    lines.append("== JXPerf-JAX Tier-1 profile ==")
+    lines.append(f"  sampling period: {report.sampling_period} events")
+    lines.append(f"  events: {report.total_store_events:,} stores / "
+                 f"{report.total_load_events:,} loads")
+    for kind, table in (("dead_store", report.dead_stores),
+                        ("silent_store", report.silent_stores),
+                        ("silent_load", report.silent_loads)):
+        lines.append(f"  F^{kind} = {fr[kind]:.1%} "
+                     f"({table.total_count} sampled pairs)")
+        for (c1, c2), st in table.top(top_k):
+            lines.append(f"    x{st.count:<5d} {fmt_context(c1[-3:])}")
+            lines.append(f"           -> {fmt_context(c2[-3:])}")
+    return "\n".join(lines)

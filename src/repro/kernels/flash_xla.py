@@ -1,0 +1,146 @@
+"""Flash attention in pure JAX with a hand-written custom_vjp.
+
+This is the XLA-lowerable twin of the Pallas kernel (flash_attention.py):
+KV-chunked online-softmax forward, recompute-based backward — O(S·D)
+residuals (q, k, v, out, lse) instead of O(S²) score materialization. It is
+what the dry-run lowers for every train/prefill cell, so memory_analysis
+and cost_analysis reflect flash-attention behaviour, and it is the actual
+compute path on non-TPU backends. GQA handled by head grouping.
+
+Numerical convention matches ref.attention_ref (f32 accumulation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_CHUNK = 512
+NEG_INF = -1e30
+
+
+def _chunks(x: jax.Array, chunk: int, axis: int = 1) -> jax.Array:
+    """(B, S, ...) -> (nch, B, chunk, ...) for scanning."""
+    B = x.shape[0]
+    S = x.shape[axis]
+    nch = S // chunk
+    xs = x.reshape(x.shape[:axis] + (nch, chunk) + x.shape[axis + 1:])
+    return jnp.moveaxis(xs, axis, 0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_xla(q, k, v, causal: bool = True, q_offset: int = 0,
+              chunk: int = DEFAULT_CHUNK):
+    out, _ = _fwd_impl(q, k, v, causal, q_offset, chunk)
+    return out
+
+
+def _mask_for(Sq, ck_len, q_offset, kidx, chunk, kv_total, causal):
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = kidx * chunk + jnp.arange(ck_len)[None, :]
+    m = kpos < kv_total
+    if causal:
+        m = m & (qpos >= kpos)
+    return m  # (Sq, ck_len)
+
+
+def _fwd_impl(q, k, v, causal, q_offset, chunk):
+  with jax.named_scope("flashattn_vmem"):
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    f32 = jnp.float32
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, f32))
+    chunk = min(chunk, Skv)
+    pad = (-Skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qg = q.reshape(B, Sq, Hkv, G, D)
+
+    ks = _chunks(k, chunk)
+    vs = _chunks(v, chunk)
+    nch = ks.shape[0]
+
+    def body(carry, inp):
+        acc, m, l = carry
+        kc, vc, kidx = inp
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kc,
+                       preferred_element_type=f32) * scale
+        msk = _mask_for(Sq, chunk, q_offset, kidx, chunk, Skv, causal)
+        s = jnp.where(msk[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vc, preferred_element_type=f32)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, Sq, Hkv, G, D), f32)
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, f32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), f32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0), (ks, vs, jnp.arange(nch)))
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l_safe[..., None]).astype(q.dtype).reshape(B, Sq, Hq, D)
+    lse = m + jnp.log(l_safe)
+  return out, lse
+
+
+def _fwd_rule(q, k, v, causal, q_offset, chunk):
+    out, lse = _fwd_impl(q, k, v, causal, q_offset, chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd_rule(causal, q_offset, chunk, res, dout):
+  with jax.named_scope("flashattn_vmem"):
+    q, k, v, out, lse = res
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    f32 = jnp.float32
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, f32))
+    chunk_ = min(chunk, Skv)
+    pad = (-Skv) % chunk_
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(f32)
+    dog = dout.reshape(B, Sq, Hkv, G, D).astype(f32)
+    og = out.reshape(B, Sq, Hkv, G, D).astype(f32)
+    delta = jnp.sum(dog * og, axis=-1)                      # (B,Sq,Hkv,G)
+
+    ks = _chunks(kp, chunk_)
+    vs = _chunks(vp, chunk_)
+    nch = ks.shape[0]
+
+    def body(dq, inp):
+        kc, vc, kidx = inp
+        kcf = kc.astype(f32)
+        vcf = vc.astype(f32)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kcf,
+                       preferred_element_type=f32) * scale
+        msk = _mask_for(Sq, chunk_, q_offset, kidx, chunk_, Skv, causal)
+        s = jnp.where(msk[None, :, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                     # (B,Sq,Hkv,G,ck)
+        dv_c = jnp.einsum("bqhgk,bqhgd->bkhd", p, dog)
+        dp = jnp.einsum("bqhgd,bkhd->bqhgk", dog, vcf,
+                        preferred_element_type=f32)
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bqhgk,bkhd->bqhgd", ds, kcf,
+                             preferred_element_type=f32)
+        dk_c = jnp.einsum("bqhgk,bqhgd->bkhd", ds, qg)
+        return dq, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, Sq, Hkv, G, D), f32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (ks, vs, jnp.arange(nch)))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, nch * chunk_, Hkv, D)[:, :Skv]
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, nch * chunk_, Hkv, D)[:, :Skv]
+  return (dq.reshape(B, Sq, Hq, D).astype(q.dtype),
+          dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_xla.defvjp(_fwd_rule, _bwd_rule)

@@ -1,0 +1,85 @@
+"""jit'd wrappers + backend dispatch for the Pallas kernels.
+
+On TPU the Pallas kernels are used (``REPRO_USE_PALLAS=1`` or automatic);
+elsewhere the pure-jnp oracles from ``ref.py`` run — they are the same math
+and XLA/GSPMD handles fusion + partitioning. Tests exercise the kernels in
+interpret mode against the oracles across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import flash_attention as _fa
+from repro.kernels import silent_compare as _sc
+from repro.kernels import rmsnorm as _rn
+
+
+def _use_pallas() -> bool:
+    env = os.environ.get("REPRO_USE_PALLAS")
+    if env is not None:
+        return env not in ("0", "false", "")
+    return jax.default_backend() == "tpu"
+
+
+def _pallas_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ----------------------------------------------------------------------
+# KV length above which the O(S^2)-memory reference path is replaced by the
+# flash (chunked online-softmax, custom-vjp) path.
+FLASH_THRESHOLD = 1024
+
+
+def attention(q, k, v, *, causal: bool = True, q_offset=0,
+              kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Model-facing attention entry point (GQA)."""
+    sq, skv = q.shape[1], k.shape[1]
+    if kv_len is None and isinstance(q_offset, int) and q_offset == 0:
+        if _use_pallas() and sq >= 8:
+            return _fa.flash_attention(q, k, v, causal=causal,
+                                       interpret=_pallas_interpret())
+        if skv >= FLASH_THRESHOLD:
+            from repro.kernels.flash_xla import flash_xla
+            return flash_xla(q, k, v, causal, 0)
+    return _ref.attention_ref(q, k, v, causal=causal, q_offset=q_offset,
+                              kv_len=kv_len)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, interpret=None,
+                    block_q: int = 128, block_k: int = 128) -> jax.Array:
+    if interpret is None:
+        interpret = _pallas_interpret()
+    return _fa.flash_attention(q, k, v, causal=causal, interpret=interpret,
+                               block_q=block_q, block_k=block_k)
+
+
+@partial(jax.jit, static_argnames=("tol", "use_pallas"))
+def silent_fraction(a, b, tol: float = 0.01, use_pallas: bool = False):
+    """Fraction of silent (unchanged within tol) elements between a and b."""
+    n = a.size
+    if use_pallas:
+        cnt = _sc.silent_compare(a, b, tol, interpret=_pallas_interpret())
+    else:
+        cnt = _ref.silent_compare_ref(a, b, tol)
+    return cnt.astype(jnp.float32) / max(n, 1)
+
+
+def silent_count(a, b, tol: float = 0.01, use_pallas: Optional[bool] = None):
+    if use_pallas is None:
+        use_pallas = _use_pallas()
+    if use_pallas:
+        return _sc.silent_compare(a, b, tol, interpret=_pallas_interpret())
+    return _ref.silent_compare_ref(a, b, tol)
+
+
+def rmsnorm(x, scale, eps: float = 1e-5):
+    if _use_pallas():
+        return _rn.rmsnorm(x, scale, eps, interpret=_pallas_interpret())
+    return _ref.rmsnorm_ref(x, scale, eps)

@@ -1,0 +1,73 @@
+"""Batched serving driver: prefill + greedy decode with KV cache.
+
+CPU smoke:  PYTHONPATH=src python -m repro.launch.serve \
+                --arch qwen3-1.7b --smoke --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.data.synthetic import batch_at
+from repro.models.zoo import build_model
+from repro.serve.decode import make_serve_step
+
+
+def run(arch: str, *, smoke: bool = True, batch: int = 4,
+        prompt_len: int = 32, gen: int = 16, seed: int = 0):
+    cfg = registry.get_config(arch)
+    if smoke:
+        cfg = cfg.smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+
+    data = batch_at(cfg, batch, prompt_len, seed=seed, step=0)
+    prompts = jnp.asarray(data["tokens"])
+    kw = {}
+    if cfg.family == "vlm":
+        kw["img"] = jnp.asarray(data["img"])
+    if cfg.family == "audio":
+        kw["frames"] = jnp.asarray(data["frames"])
+
+    max_len = prompt_len + gen + 1
+    cache = model.init_cache(params, batch, max_len, kv_dtype=jnp.float32, **kw)
+
+    serve_step = jax.jit(make_serve_step(model), donate_argnums=(1,))
+
+    # teacher-forced prefill through the decode path (exercises the cache)
+    t0 = time.time()
+    tok = prompts[:, :1]
+    for t in range(prompt_len):
+        nxt, cache = serve_step(params, cache, prompts[:, t:t + 1])
+    generated = [nxt]
+    for _ in range(gen - 1):
+        nxt, cache = serve_step(params, cache, generated[-1])
+        generated.append(nxt)
+    out = jnp.concatenate(generated, axis=1)
+    dt = time.time() - t0
+    tps = batch * (prompt_len + gen) / dt
+    print(f"[serve] {arch}: {batch} seqs, prompt {prompt_len} + gen {gen} "
+          f"in {dt:.2f}s ({tps:.0f} tok/s)")
+    print("[serve] sample continuation:", np.asarray(out[0])[:12])
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    a = ap.parse_args()
+    run(a.arch, smoke=a.smoke, batch=a.batch, prompt_len=a.prompt_len,
+        gen=a.gen)
+
+
+if __name__ == "__main__":
+    main()

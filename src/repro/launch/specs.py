@@ -1,0 +1,53 @@
+"""Abstract input specs (ShapeDtypeStruct) per (arch x shape) cell.
+
+The shape-stand-ins follow the assignment: [audio]/[vlm] backbones receive
+precomputed frame/patch embeddings here (the modality frontend is a stub).
+No device memory is allocated by anything in this module.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Training/prefill batch: tokens + labels (+ modality stubs)."""
+    B, S = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    batch = {"tokens": sd((B, S), jnp.int32)}
+    if shape.kind == "train":
+        batch["labels"] = sd((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        batch["img"] = sd((B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = sd((B, encoder_len(cfg, shape), cfg.d_model),
+                             jnp.bfloat16)
+    return batch
+
+
+def encoder_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Stub frame count for the audio backbone at a given shape cell."""
+    return shape.seq_len
+
+
+def decode_inputs(model, cfg: ModelConfig, shape: ShapeConfig,
+                  kv_dtype=jnp.bfloat16):
+    """(params, cache, tokens) abstract triple for serve_step lowering."""
+    B, S = shape.global_batch, shape.seq_len
+    params = model.abstract_params(jnp.bfloat16)
+    kw = {}
+    if cfg.family == "vlm":
+        kw["img"] = jax.ShapeDtypeStruct((B, cfg.num_image_tokens, cfg.d_model),
+                                         jnp.bfloat16)
+    if cfg.family == "audio":
+        kw["frames"] = jax.ShapeDtypeStruct((B, encoder_len(cfg, shape),
+                                             cfg.d_model), jnp.bfloat16)
+    cache = jax.eval_shape(
+        lambda p, kws: model.init_cache(p, B, S, kv_dtype=kv_dtype, **kws),
+        params, kw)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return params, cache, tokens

@@ -1,0 +1,494 @@
+"""Decoder LM assembly: heterogeneous block schedules compiled into
+scan-over-superblocks so the HLO is O(1) in network depth.
+
+A *superblock* is the repeating pattern unit of an architecture:
+  dense/moe : 1 block
+  vlm       : (period-1) dense + 1 cross-attn block        (llama-3.2-vision)
+  hybrid    : `attn_period` mamba + 1 SHARED attn block    (zamba2)
+  ssm       : (slstm_period-1) mLSTM + 1 sLSTM             (xlstm)
+  audio     : separate encoder scan + decoder scan          (whisper)
+
+Shared blocks (zamba2's attention) have ONE parameter set closed over the
+scan — faithful to the published weight sharing — while their KV caches are
+per-invocation (stacked, carried through the scan like all other caches).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import params as P
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+from repro.sharding.ctx import shard
+
+
+def _mask_pad_vocab(logits: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """-inf the padded vocab tail so sampling/eval never selects it."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    pad = logits.shape[-1] - cfg.vocab_size
+    neg = jnp.full(logits.shape[:-1] + (pad,), -1e30, logits.dtype)
+    return jnp.concatenate([logits[..., :cfg.vocab_size], neg], axis=-1)
+
+
+# ----------------------------------------------------------------------
+# Schedule
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class Schedule:
+    pattern: Tuple[str, ...]      # sub-block types within one superblock
+    n_super: int
+    tail: Tuple[str, ...] = ()    # leftover blocks appended after the scan
+    has_shared: bool = False
+    has_encoder: bool = False
+
+
+def make_schedule(cfg: ModelConfig) -> Schedule:
+    if cfg.family == "dense":
+        return Schedule(("dense",), cfg.num_layers)
+    if cfg.family == "moe":
+        return Schedule(("moe",), cfg.num_layers)
+    if cfg.family == "vlm":
+        p = cfg.cross_attn_period
+        assert cfg.num_layers % p == 0, "vlm layers must divide the period"
+        return Schedule(("dense",) * (p - 1) + ("xattn",), cfg.num_layers // p)
+    if cfg.family == "hybrid":
+        p = cfg.attn_period
+        n, r = divmod(cfg.num_layers, p)
+        return Schedule(("mamba",) * p + ("shared",), n,
+                        tail=("mamba",) * r, has_shared=True)
+    if cfg.family == "ssm":
+        sp = cfg.xlstm.slstm_period
+        assert cfg.num_layers % sp == 0
+        return Schedule(("mlstm",) * (sp - 1) + ("slstm",), cfg.num_layers // sp)
+    if cfg.family == "audio":
+        return Schedule(("encdec",), cfg.num_layers, has_encoder=True)
+    raise ValueError(cfg.family)
+
+
+# ----------------------------------------------------------------------
+# Sub-block declarations / applications
+# ----------------------------------------------------------------------
+def decl_moe_block(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln1": P.norm(cfg.d_model),
+        "attn": L.decl_attention(cfg),
+        "ln2": P.norm(cfg.d_model),
+        "moe": M.decl_moe(cfg),
+    }
+
+
+def decl_encdec_block(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln1": P.norm(cfg.d_model),
+        "attn": L.decl_attention(cfg),
+        "lnx": P.norm(cfg.d_model),
+        "xattn": L.decl_attention(cfg, cross=True),
+        "ln2": P.norm(cfg.d_model),
+        "mlp": L.decl_mlp(cfg),
+    }
+
+
+def _decl_sub(cfg: ModelConfig, typ: str) -> Dict[str, Any]:
+    if typ == "dense":
+        return L.decl_dense_block(cfg)
+    if typ == "moe":
+        return decl_moe_block(cfg)
+    if typ == "xattn":
+        return L.decl_xattn_block(cfg)
+    if typ == "mamba":
+        return SSM.decl_mamba(cfg)
+    if typ == "mlstm":
+        return XL.decl_mlstm(cfg)
+    if typ == "slstm":
+        return XL.decl_slstm(cfg)
+    if typ == "encdec":
+        return decl_encdec_block(cfg)
+    if typ == "shared":
+        return {}                     # params live outside the scan
+    raise ValueError(typ)
+
+
+def decl_superblock(cfg: ModelConfig, pattern) -> Dict[str, Any]:
+    return {f"b{i}_{t}": _decl_sub(cfg, t) for i, t in enumerate(pattern)
+            if t != "shared"}
+
+
+# ----------------------------------------------------------------------
+# Caches / states
+# ----------------------------------------------------------------------
+def _init_sub_cache(cfg: ModelConfig, typ: str, batch: int, max_len: int,
+                    kv_dtype) -> Any:
+    Hkv, D = cfg.num_kv_heads, cfg.head_dim
+    if typ in ("dense", "moe", "shared", "encdec"):
+        c = {"k": jnp.zeros((batch, max_len, Hkv, D), kv_dtype),
+             "v": jnp.zeros((batch, max_len, Hkv, D), kv_dtype),
+             "idx": jnp.zeros((), jnp.int32)}
+        if typ == "encdec":
+            c["xk"] = jnp.zeros((batch, cfg.encoder_frames, Hkv, D), kv_dtype)
+            c["xv"] = jnp.zeros((batch, cfg.encoder_frames, Hkv, D), kv_dtype)
+        return c
+    if typ == "xattn":
+        return {"xk": jnp.zeros((batch, cfg.num_image_tokens, Hkv, D), kv_dtype),
+                "xv": jnp.zeros((batch, cfg.num_image_tokens, Hkv, D), kv_dtype)}
+    if typ == "mamba":
+        return SSM.init_mamba_state(cfg, batch, kv_dtype)
+    if typ == "mlstm":
+        return XL.init_mlstm_state(cfg, batch)
+    if typ == "slstm":
+        return XL.init_slstm_state(cfg, batch)
+    raise ValueError(typ)
+
+
+def _stack_cache(tree, n: int):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree)
+
+
+# ----------------------------------------------------------------------
+# Model
+# ----------------------------------------------------------------------
+class LM:
+    """Functional LM: holds config + schedule, params passed explicitly."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.sched = make_schedule(cfg)
+        # activation checkpointing for the scanned superblock:
+        #   "none" | "full" | "dots"  (set by the train-step factory)
+        self.remat = "none"
+
+    def _maybe_remat(self, fn):
+        if self.remat == "full":
+            return jax.checkpoint(fn, prevent_cse=False)
+        if self.remat == "dots":
+            return jax.checkpoint(
+                fn, prevent_cse=False,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+        return fn
+
+    # -------------------------- declarations -------------------------
+    def decl(self) -> Dict[str, Any]:
+        cfg, sch = self.cfg, self.sched
+        d = {
+            "embed": P.ParamDecl((cfg.padded_vocab, cfg.d_model),
+                                 ("vocab", "embed"), "normal", 0.02),
+            "final_norm": P.norm(cfg.d_model),
+            "main": P.stack_decls(decl_superblock(cfg, sch.pattern), sch.n_super),
+        }
+        if not cfg.tie_embeddings:
+            # vocab-major (V, d) so the lm_head vjp is transpose-free
+            d["head"] = P.ParamDecl((cfg.padded_vocab, cfg.d_model),
+                                    ("vocab", "embed"), "normal",
+                                    1.0 / (cfg.d_model ** 0.5))
+        if sch.tail:
+            d["tail"] = P.stack_decls(_decl_sub(cfg, sch.tail[0]), len(sch.tail))
+        if sch.has_shared:
+            d["shared"] = L.decl_dense_block(cfg)
+        if sch.has_encoder:
+            d["enc"] = {
+                "blocks": P.stack_decls(L.decl_dense_block(cfg), cfg.encoder_layers),
+                "norm": P.norm(cfg.d_model),
+            }
+        return d
+
+    def init(self, key: jax.Array, dtype=None) -> Any:
+        dtype = dtype or jnp.dtype(self.cfg.param_dtype)
+        return P.init_tree(key, self.decl(), dtype)
+
+    def abstract_params(self, dtype=None) -> Any:
+        dtype = dtype or jnp.dtype(self.cfg.param_dtype)
+        return P.abstract_tree(self.decl(), dtype)
+
+    def param_axes(self) -> Any:
+        return P.axes_tree(self.decl())
+
+    # ----------------------------- encoder ---------------------------
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """audio/whisper encoder over stubbed frame embeddings (B,F,d)."""
+        cfg = self.cfg
+        x = frames.astype(jnp.dtype(cfg.dtype))
+
+        def blk(x, p):
+            y, _ = L.apply_dense_block(p, cfg, x, causal=False, use_rope=True)
+            return y, None
+        x, _ = jax.lax.scan(blk, x, params["enc"]["blocks"])
+        return L.apply_rmsnorm(params["enc"]["norm"], x, cfg.norm_eps)
+
+    # ----------------------------- forward ---------------------------
+    def backbone(self, params, tokens: jax.Array, *,
+                 img: Optional[jax.Array] = None,
+                 frames: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+        """Everything up to (and incl.) the final norm: (hidden, moe_aux)."""
+        cfg, sch = self.cfg, self.sched
+        dt = jnp.dtype(cfg.dtype)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+        x = shard(x, "btd")
+
+        enc_out = None
+        if sch.has_encoder:
+            assert frames is not None, "audio family needs frame embeddings"
+            enc_out = self.encode(params, frames)
+        if cfg.family == "vlm":
+            assert img is not None, "vlm family needs image patch embeddings"
+            img = img.astype(dt)
+
+        def superblock(carry, p_layer):
+            x, aux = carry
+            for i, typ in enumerate(sch.pattern):
+                name = f"b{i}_{typ}"
+                if typ == "dense":
+                    x, _ = L.apply_dense_block(p_layer[name], cfg, x)
+                elif typ == "moe":
+                    blk = p_layer[name]
+                    h, _ = L.apply_attention(
+                        blk["attn"], cfg,
+                        L.apply_rmsnorm(blk["ln1"], x, cfg.norm_eps))
+                    x = x + h
+                    h, a = M.apply_moe(
+                        blk["moe"], cfg,
+                        L.apply_rmsnorm(blk["ln2"], x, cfg.norm_eps))
+                    x = x + h
+                    aux = aux + a
+                elif typ == "xattn":
+                    x = L.apply_xattn_block(p_layer[name], cfg, x, img)
+                elif typ == "mamba":
+                    x, _ = SSM.apply_mamba(p_layer[name], cfg, x)
+                elif typ == "mlstm":
+                    x, _ = XL.apply_mlstm(p_layer[name], cfg, x)
+                elif typ == "slstm":
+                    x, _ = XL.apply_slstm(p_layer[name], cfg, x)
+                elif typ == "shared":
+                    x, _ = L.apply_dense_block(params["shared"], cfg, x)
+                elif typ == "encdec":
+                    blk = p_layer[name]
+                    h, _ = L.apply_attention(
+                        blk["attn"], cfg,
+                        L.apply_rmsnorm(blk["ln1"], x, cfg.norm_eps))
+                    x = x + h
+                    h, _ = L.apply_attention(
+                        blk["xattn"], cfg,
+                        L.apply_rmsnorm(blk["lnx"], x, cfg.norm_eps),
+                        kv_src=enc_out, causal=False, use_rope=False)
+                    x = x + h
+                    x = x + L.apply_mlp(
+                        blk["mlp"], cfg,
+                        L.apply_rmsnorm(blk["ln2"], x, cfg.norm_eps))
+                else:
+                    raise ValueError(typ)
+            return (x, aux), None
+
+        (x, aux), _ = jax.lax.scan(self._maybe_remat(superblock),
+                                   (x, jnp.zeros((), jnp.float32)),
+                                   params["main"])
+        if sch.tail:
+            def tailblk(x, p):
+                y, _ = SSM.apply_mamba(p, cfg, x)
+                return y, None
+            x, _ = jax.lax.scan(tailblk, x, params["tail"])
+
+        x = L.apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return x, aux
+
+    def head_weight(self, params) -> jax.Array:
+        """(V_padded, d) vocab-major head weight (embedding when tied)."""
+        return (params["embed"] if self.cfg.tie_embeddings
+                else params["head"])
+
+    def forward(self, params, tokens: jax.Array, *,
+                img: Optional[jax.Array] = None,
+                frames: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+        """Train/prefill forward. Returns (logits, moe_aux_loss)."""
+        cfg = self.cfg
+        x, aux = self.backbone(params, tokens, img=img, frames=frames)
+        w = self.head_weight(params)
+        logits = L.lm_head(x, w.astype(x.dtype))
+        logits = _mask_pad_vocab(logits, cfg)
+        return shard(logits, "btv"), aux
+
+    def loss(self, params, batch: Dict[str, Any], *,
+             z_loss: float = 0.0) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Fused vocab-parallel LM loss (never materializes global logits)."""
+        from repro.sharding.ctx import current_sharder
+        from repro.train.fused_xent import lm_loss
+        x, aux = self.backbone(params, batch["tokens"],
+                               img=batch.get("img"),
+                               frames=batch.get("frames"))
+        w = self.head_weight(params)
+        nll = lm_loss(x, w.astype(x.dtype), batch["labels"],
+                      z_loss=z_loss, sharder=current_sharder())
+        return nll + aux, {"nll": nll, "moe_aux": aux}
+
+    # ------------------------------ decode ---------------------------
+    def init_cache(self, params, batch: int, max_len: int, *,
+                   img: Optional[jax.Array] = None,
+                   frames: Optional[jax.Array] = None,
+                   kv_dtype=jnp.bfloat16) -> Any:
+        """Preallocate decode caches; precompute cross-attn KV."""
+        cfg, sch = self.cfg, self.sched
+        main = {}
+        for i, typ in enumerate(sch.pattern):
+            sub = _init_sub_cache(cfg, typ, batch, max_len, kv_dtype)
+            main[f"b{i}_{typ}"] = sub
+        if getattr(self, "decode_unroll", False):
+            # per-layer leaves: every layer's cache is its own buffer, so
+            # unrolled decode aliases updates in place (no scan xs/ys
+            # slice-copies) — §Perf hillclimb C
+            cache = {"main": [jax.tree_util.tree_map(lambda x: x + 0, main)
+                              for _ in range(sch.n_super)]}
+        else:
+            cache = {"main": _stack_cache(main, sch.n_super)}
+        if sch.tail:
+            tail = _init_sub_cache(cfg, sch.tail[0], batch, max_len, kv_dtype)
+            cache["tail"] = _stack_cache(tail, len(sch.tail))
+
+        # Precompute cross-attention K/V (vlm images / encdec encoder out).
+        if cfg.family == "vlm" and img is not None:
+            cache = self._fill_cross_kv(params, cache, img.astype(jnp.dtype(cfg.dtype)),
+                                        "xattn", "xattn")
+        if sch.has_encoder and frames is not None:
+            enc_out = self.encode(params, frames)
+            cache = self._fill_cross_kv(params, cache, enc_out, "encdec", "xattn")
+        return cache
+
+    def _fill_cross_kv(self, params, cache, src, typ, attn_key):
+        """Compute per-layer cross KV from src for all scanned layers."""
+        cfg, sch = self.cfg, self.sched
+        Hkv, D = cfg.num_kv_heads, cfg.head_dim
+        B, Skv = src.shape[:2]
+        for i, t in enumerate(sch.pattern):
+            if t != typ:
+                continue
+            name = f"b{i}_{t}"
+            blk_p = params["main"][name]
+            ap = blk_p[attn_key] if attn_key in blk_p else blk_p["xattn"]
+
+            def kv_of(p_attn, x):
+                k = (x @ p_attn["wk"]["w"].astype(x.dtype)).reshape(B, Skv, Hkv, D)
+                v = (x @ p_attn["wv"]["w"].astype(x.dtype)).reshape(B, Skv, Hkv, D)
+                if cfg.qk_norm:
+                    k = L.apply_rmsnorm(p_attn["k_norm"], k, cfg.norm_eps)
+                return k, v
+            # vmap over the stacked layer dim
+            ks, vs = jax.vmap(kv_of, in_axes=(0, None))(ap, src)
+            sub = dict(cache["main"][name])
+            sub["xk"] = ks.astype(sub["xk"].dtype)
+            sub["xv"] = vs.astype(sub["xv"].dtype)
+            cache["main"][name] = sub
+        return cache
+
+    def decode_step(self, params, cache, tokens: jax.Array) -> Tuple[jax.Array, Any]:
+        """One decode step. tokens: (B, 1). Returns (logits, new_cache)."""
+        cfg, sch = self.cfg, self.sched
+        dt = jnp.dtype(cfg.dtype)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+        x = shard(x, "btd_dec")
+
+        def superblock(x, inp):
+            p_layer, c_layer = inp
+            new_c = {}
+            for i, typ in enumerate(sch.pattern):
+                name = f"b{i}_{typ}"
+                c = c_layer[name]
+                if typ == "dense":
+                    x, nc = L.apply_dense_block(p_layer[name], cfg, x, cache=c)
+                elif typ == "moe":
+                    blk = p_layer[name]
+                    h, nc = L.apply_attention(
+                        blk["attn"], cfg,
+                        L.apply_rmsnorm(blk["ln1"], x, cfg.norm_eps), cache=c)
+                    x = x + h
+                    h, _ = M.apply_moe(
+                        blk["moe"], cfg,
+                        L.apply_rmsnorm(blk["ln2"], x, cfg.norm_eps))
+                    x = x + h
+                elif typ == "xattn":
+                    blk = p_layer[name]
+                    h = L.apply_rmsnorm(blk["ln1"], x, cfg.norm_eps)
+                    h = self._cached_xattn(blk["xattn"], h, c)
+                    x = x + jnp.tanh(blk["gate_attn"].astype(x.dtype)) * h
+                    h = L.apply_mlp(blk["mlp"], cfg,
+                                    L.apply_rmsnorm(blk["ln2"], x, cfg.norm_eps))
+                    x = x + jnp.tanh(blk["gate_mlp"].astype(x.dtype)) * h
+                    nc = c
+                elif typ == "mamba":
+                    x, nc = SSM.apply_mamba(p_layer[name], cfg, x, state=c)
+                elif typ == "mlstm":
+                    x, nc = XL.apply_mlstm(p_layer[name], cfg, x, state=c)
+                elif typ == "slstm":
+                    x, nc = XL.apply_slstm(p_layer[name], cfg, x, state=c)
+                elif typ == "shared":
+                    x, nc = L.apply_dense_block(params["shared"], cfg, x, cache=c)
+                elif typ == "encdec":
+                    blk = p_layer[name]
+                    h, nc = L.apply_attention(
+                        blk["attn"], cfg,
+                        L.apply_rmsnorm(blk["ln1"], x, cfg.norm_eps), cache=c)
+                    x = x + h
+                    h = L.apply_rmsnorm(blk["lnx"], x, cfg.norm_eps)
+                    h = self._cached_xattn(blk["xattn"], h, c)
+                    x = x + h
+                    x = x + L.apply_mlp(blk["mlp"], cfg,
+                                        L.apply_rmsnorm(blk["ln2"], x, cfg.norm_eps))
+                    nc = {**nc, "xk": c["xk"], "xv": c["xv"]}
+                else:
+                    raise ValueError(typ)
+                new_c[name] = nc
+            return x, new_c
+
+        if getattr(self, "decode_unroll", False):
+            # unrolled layers over per-layer cache leaves: no scan xs/ys
+            # slice-copies; XLA aliases each layer's cache in place
+            new_main = []
+            for li in range(sch.n_super):
+                p_l = jax.tree_util.tree_map(lambda a: a[li], params["main"])
+                x, nc = superblock(x, (p_l, cache["main"][li]))
+                new_main.append(nc)
+        else:
+            x, new_main = jax.lax.scan(superblock, x,
+                                       (params["main"], cache["main"]))
+        new_cache = {"main": new_main}
+        if sch.tail:
+            def tailblk(x, inp):
+                p, c = inp
+                y, nc = SSM.apply_mamba(p, cfg, x, state=c)
+                return y, nc
+            x, new_tail = jax.lax.scan(tailblk, x, (params["tail"], cache["tail"]))
+            new_cache["tail"] = new_tail
+
+        x = L.apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        w = self.head_weight(params)
+        logits = jnp.einsum("bsd,vd->bsv", x, w.astype(dt))
+        return _mask_pad_vocab(logits, cfg), new_cache
+
+    def _cached_xattn(self, p_attn, x, c):
+        """Cross-attention against precomputed cached KV."""
+        cfg = self.cfg
+        B, S, _ = x.shape
+        H, D = cfg.num_heads, cfg.head_dim
+        q = (x @ p_attn["wq"]["w"].astype(x.dtype)).reshape(B, S, H, D)
+        if cfg.qk_norm:
+            q = L.apply_rmsnorm(p_attn["q_norm"], q, cfg.norm_eps)
+        from repro.serve.flash_decode import (cross_attention_sharded,
+                                              decode_shard_plan)
+        from repro.sharding.ctx import current_sharder
+        sharder = current_sharder()
+        plan = decode_shard_plan(sharder, B, c["xk"].shape[1])
+        if plan is not None:
+            b_ax, s_ax = plan
+            out = cross_attention_sharded(
+                q, c["xk"], c["xv"], mesh=sharder.mesh,
+                batch_axes=b_ax, seq_axes=s_ax)
+        else:
+            out = L.attention(q, c["xk"].astype(x.dtype),
+                              c["xv"].astype(x.dtype), causal=False)
+        out = out.reshape(B, S, H * D)
+        return out @ p_attn["wo"]["w"].astype(x.dtype)

@@ -1,0 +1,118 @@
+"""Mixture-of-Experts layer: token-choice top-k routing with capacity,
+GShard/Switch-style einsum dispatch (MXU-friendly, GSPMD-shardable).
+
+Dispatch is *row-local*: capacity slots are assigned per batch row (cumsum
+over the sequence dim only), so no cross-batch communication is induced by
+the routing bookkeeping itself; expert parallelism comes from sharding the
+expert dim of the (b, e, c, d) dispatch tensor (all-to-all inserted by
+GSPMD when experts live on the "model" axis).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import params as P
+from repro.sharding.ctx import shard
+
+
+def decl_moe(cfg: ModelConfig) -> Dict[str, Any]:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.expert_d_ff, m.num_experts
+    decl = {
+        "router": P.ParamDecl((d, e), ("embed", None), "normal", 0.02),
+        "w_up": P.ParamDecl((e, d, f), ("experts", "embed", "ffn"),
+                            "normal", 1.0 / math.sqrt(d)),
+        "w_gate": P.ParamDecl((e, d, f), ("experts", "embed", "ffn"),
+                              "normal", 1.0 / math.sqrt(d)),
+        "w_down": P.ParamDecl((e, f, d), ("experts", "ffn", "embed"),
+                              "normal", 1.0 / math.sqrt(f)),
+    }
+    if m.shared_expert:
+        decl["shared"] = {
+            "up": P.linear(d, f, "embed", "ffn"),
+            "gate": P.linear(d, f, "embed", "ffn"),
+            "down": P.linear(f, d, "ffn", "embed"),
+        }
+    return decl
+
+
+GROUP = 256  # tokens per dispatch group; keeps the (g,E,C) tensors small
+
+
+def capacity(cfg: ModelConfig, group: int) -> int:
+    m = cfg.moe
+    c = int(math.ceil(m.experts_per_token * group * m.capacity_factor
+                      / m.num_experts))
+    # lane-align capacity for TPU-friendly (e, c) tiles
+    return max(8, -(-c // 8) * 8)
+
+
+def apply_moe(p, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    Tokens are regrouped to (n_groups, GROUP, d); capacity is per-group
+    (GShard): routing bookkeeping (cumsum) never crosses a group, so the
+    dispatch tensors stay O(tokens * E * C/GROUP) and shard cleanly.
+    """
+    m = cfg.moe
+    Bo, So, d = x.shape
+    E, K = m.num_experts, m.experts_per_token
+    tokens = Bo * So
+    G = min(GROUP, tokens)
+    x = x.reshape(tokens // G, G, d)
+    B, S = x.shape[:2]
+    C = capacity(cfg, G)
+    dt = x.dtype
+
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                        # (B,S,K)
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)                # renorm
+
+    # Load-balance auxiliary loss (Switch): E * sum(mean_prob * mean_assign)
+    assign1 = jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32)
+    aux = E * jnp.mean(jnp.mean(probs, axis=(0, 1)) *
+                       jnp.mean(assign1, axis=(0, 1))) * m.aux_loss_coef
+
+    # Capacity slots per (row, expert): position of each token in its expert
+    # queue, kth choices processed in priority order.
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)                # (B,S,K,E)
+    # priority: all k=0 choices first, then k=1, ... (GShard policy)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(B, K * S, E)             # (B,KS,E)
+    pos = jnp.cumsum(flat, axis=1) - flat                                # (B,KS,E)
+    pos = pos.reshape(B, K, S, E).transpose(0, 2, 1, 3)                  # (B,S,K,E)
+    pos_in_e = jnp.sum(pos * onehot, axis=-1)                            # (B,S,K)
+    keep = pos_in_e < C                                                  # dropped beyond capacity
+
+    gate_keep = gate_vals * keep.astype(jnp.float32)                     # (B,S,K)
+    # dispatch (B,S,E,C) one-hot; combine = dispatch * gate
+    slot_oh = jax.nn.one_hot(jnp.where(keep, pos_in_e, C), C + 1,
+                             dtype=jnp.float32)[..., :C]                 # (B,S,K,C)
+    disp = jnp.einsum("bske,bskc->bsec", onehot.astype(jnp.float32), slot_oh)
+    comb = jnp.einsum("bske,bskc,bsk->bsec", onehot.astype(jnp.float32),
+                      slot_oh, gate_keep)
+
+    xin = jnp.einsum("bsec,bsd->becd", disp.astype(dt), x)               # (B,E,C,d)
+    xin = shard(xin, "becd")
+    up = jnp.einsum("becd,edf->becf", xin, p["w_up"].astype(dt))
+    gt = jnp.einsum("becd,edf->becf", xin, p["w_gate"].astype(dt))
+    h = jax.nn.silu(gt) * up
+    h = shard(h, "becf")
+    eout = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(dt))       # (B,E,C,d)
+    eout = shard(eout, "becd")
+    out = jnp.einsum("bsec,becd->bsd", comb.astype(dt), eout)            # (B,S,d)
+
+    if m.shared_expert:
+        sh = p["shared"]
+        hs = jax.nn.silu(x @ sh["gate"]["w"].astype(dt)) * (x @ sh["up"]["w"].astype(dt))
+        out = out + hs @ sh["down"]["w"].astype(dt)
+
+    out = out.reshape(Bo, So, d)
+    return shard(out, "btd"), aux.astype(jnp.float32)

@@ -1,0 +1,115 @@
+"""Parameter declaration machinery.
+
+Models *declare* their parameters as trees of :class:`ParamDecl` (shape +
+logical axis names + initializer). From one declaration tree we derive, in
+lockstep: materialized parameters, abstract ShapeDtypeStructs, logical
+sharding specs, and analytic parameter counts. This guarantees the sharding
+rules can never drift out of sync with the actual parameter tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Logical axis vocabulary (mapped to mesh axes in repro.sharding.rules):
+#   embed   : d_model
+#   ffn     : feed-forward hidden
+#   q_feat  : flattened num_heads*head_dim
+#   kv_feat : flattened num_kv_heads*head_dim
+#   vocab   : vocabulary
+#   experts : MoE expert dim
+#   heads   : explicit head dim (only where unavoidable)
+#   ssm_*   : state-space dims
+#   layers  : stacked scan dim (never sharded)
+#   None    : replicated
+
+
+@dataclass(frozen=True)
+class ParamDecl:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"            # normal | zeros | ones
+    # stddev scale; None => 1/sqrt(fan_in) with fan_in = shape[-2] (or [-1])
+    scale: Optional[float] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+def is_decl(x: Any) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def _leaf_init(key, decl: ParamDecl, dtype) -> jax.Array:
+    if decl.init == "zeros":
+        return jnp.zeros(decl.shape, dtype)
+    if decl.init == "ones":
+        return jnp.ones(decl.shape, dtype)
+    if decl.scale is not None:
+        std = decl.scale
+    else:
+        fan_in = decl.shape[-2] if len(decl.shape) >= 2 else max(decl.shape[-1], 1)
+        std = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, decl.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_tree(key: jax.Array, decls: Any, dtype=jnp.float32) -> Any:
+    """Materialize a declaration tree into a parameter pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(decls, is_leaf=is_decl)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_leaf_init(k, d, dtype) for k, d in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_tree(decls: Any, dtype=jnp.float32) -> Any:
+    """ShapeDtypeStruct tree (no allocation) matching ``init_tree``."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), decls, is_leaf=is_decl)
+
+
+def axes_tree(decls: Any) -> Any:
+    """Logical axes tree matching ``init_tree`` structure."""
+    return jax.tree_util.tree_map(lambda d: d.axes, decls, is_leaf=is_decl)
+
+
+def count_tree(decls: Any) -> int:
+    return sum(d.size for d in
+               jax.tree_util.tree_leaves(decls, is_leaf=is_decl))
+
+
+def stack_decls(decls: Any, n: int) -> Any:
+    """Declaration tree for ``n`` stacked (scanned) copies of a block."""
+    def _stack(d: ParamDecl) -> ParamDecl:
+        return dataclasses.replace(
+            d, shape=(n,) + d.shape, axes=("layers",) + d.axes)
+    return jax.tree_util.tree_map(_stack, decls, is_leaf=is_decl)
+
+
+def init_stacked(key: jax.Array, decls: Any, n: int, dtype=jnp.float32) -> Any:
+    """Init ``n`` stacked copies (vmap over per-layer keys)."""
+    keys = jax.random.split(key, n)
+
+    def one(k):
+        return init_tree(k, decls, dtype)
+    return jax.vmap(one)(keys)
+
+
+# ----------------------------------------------------------------------
+# Declaration helpers
+# ----------------------------------------------------------------------
+def linear(d_in: int, d_out: int, in_ax: Optional[str], out_ax: Optional[str],
+           init: str = "normal", scale: Optional[float] = None) -> Dict[str, ParamDecl]:
+    return {"w": ParamDecl((d_in, d_out), (in_ax, out_ax), init, scale)}
+
+
+def norm(d: int, ax: Optional[str] = "embed") -> Dict[str, ParamDecl]:
+    return {"scale": ParamDecl((d,), (ax,), "ones")}

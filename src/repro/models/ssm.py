@@ -1,0 +1,201 @@
+"""Mamba2 block (State Space Duality form).
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation *within* chunks (MXU einsums) + a tiny recurrence *across*
+chunks — the TPU-idiomatic adaptation of the CUDA selective-scan kernel
+(matmuls on the MXU instead of warp-level scans). Decode is the exact O(1)
+recurrence. Both paths are validated against each other in tests.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import params as P
+from repro.sharding.ctx import shard
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    return d_inner, nheads, s.state_dim, s.head_dim, s.conv_width
+
+
+def decl_mamba(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    d_inner, H, N, Pd, W = _dims(cfg)
+    conv_ch = d_inner + 2 * N
+    return {
+        "ln": P.norm(d),
+        # in_proj -> [z(d_inner), x(d_inner), B(N), C(N), dt(H)]
+        "in_proj": P.linear(d, 2 * d_inner + 2 * N + H, "embed", "ssm_inner"),
+        "conv_w": P.ParamDecl((W, conv_ch), (None, "ssm_inner"), "normal",
+                              1.0 / math.sqrt(W)),
+        "conv_b": P.ParamDecl((conv_ch,), ("ssm_inner",), "zeros"),
+        "A_log": P.ParamDecl((H,), (None,), "zeros"),
+        "D": P.ParamDecl((H,), (None,), "ones"),
+        "dt_bias": P.ParamDecl((H,), (None,), "zeros"),
+        "gate_norm": P.norm(d_inner, "ssm_inner"),
+        "out_proj": P.linear(d_inner, d, "ssm_inner", "embed"),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., T) log-decays -> (..., T, T) lower-tri cumulative sums."""
+    T = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    seg = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P) value heads; dt: (B,S,H) softplus'd step; A: (H,) < 0;
+    Bm/Cm: (B,S,N) input/output mats (single group). Returns (B,S,H,P),
+    final_state (B,H,N,P).
+    """
+    with jax.named_scope("ssd_vmem"):
+        return _ssd_chunked_impl(xh, dt, A, Bm, Cm, chunk)
+
+
+def _ssd_chunked_impl(xh, dt, A, Bm, Cm, chunk: int):
+    Bsz, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    f32 = jnp.float32
+
+    xc = xh.reshape(Bsz, nc, chunk, H, Pd).astype(f32)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, chunk, N).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, chunk, N).astype(f32)
+
+    dA = dtc * A.astype(f32)                                  # (B,nc,Q,H) log-decay
+    dAc = jnp.cumsum(dA, axis=2)                              # within-chunk cumsum
+    dAend = dAc[:, :, -1:]                                    # (B,nc,1,H)
+
+    # 1) intra-chunk (quadratic within chunk): L = exp(segsum(dA))
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))            # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bczn,bcln->bczl", Cc, Bc)            # (B,nc,Q,Q)
+    M = scores[:, :, None] * L                                # (B,nc,H,Q,Q)
+    xdt = xc * dtc[..., None]                                 # dt-weighted input
+    y_diag = jnp.einsum("bchzl,bclhp->bczhp", M, xdt)
+
+    # 2) chunk states: decay-to-end weighted outer products B (x dt)
+    decay_states = jnp.exp(dAend - dAc)                       # (B,nc,Q,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchnp",
+                        Bc, decay_states * dtc, xc)           # (B,nc,H,N,P)
+
+    # 3) inter-chunk recurrence (tiny scan over nc chunks)
+    chunk_decay = jnp.exp(dAend[:, :, 0])                     # (B,nc,H)
+
+    def step(h, inp):
+        s_c, g_c = inp                                        # (B,H,N,P), (B,H)
+        h_new = h * g_c[..., None, None] + s_c
+        return h_new, h                                       # emit state *before* chunk
+
+    h0 = jnp.zeros((Bsz, H, N, Pd), f32)
+    hT, h_prevs = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                # (B,nc,H,N,P)
+
+    # 4) inter-chunk output: C_t decayed against previous chunk state
+    out_decay = jnp.exp(dAc)                                  # (B,nc,Q,H)
+    y_off = jnp.einsum("bczn,bczh,bchnp->bczhp", Cc, out_decay, h_prevs)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, Pd)
+    return y, hT
+
+
+def _causal_conv(x, w, b, state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (B,S,ch), w: (W,ch). state: (B,W-1,ch)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                    # (B, S+W-1, ch)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+    new_state = xp[:, x.shape[1]:]                            # last W-1 inputs
+    return out, new_state
+
+
+def apply_mamba(p, cfg: ModelConfig, x: jax.Array, *,
+                state: Optional[Dict[str, jax.Array]] = None,
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Mamba2 block. state={'ssm': (B,H,N,P), 'conv': (B,W-1,ch)} for decode."""
+    d_inner, H, N, Pd, W = _dims(cfg)
+    s = cfg.ssm
+    B_, S, _ = x.shape
+    dt_model = x.dtype
+
+    h = x
+    from repro.models.layers import apply_rmsnorm
+    h = apply_rmsnorm(p["ln"], h, cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"]["w"].astype(dt_model)
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"].astype(dt_model),
+                                      p["conv_b"].astype(dt_model), conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (H,) negative
+    xh = xs.reshape(B_, S, H, Pd)
+    xh = shard(xh, "bshp")
+
+    if state is None:
+        # pad S to a chunk multiple
+        Q = min(s.chunk_size, S)
+        S_pad = -(-S // Q) * Q
+        if S_pad != S:
+            padlen = S_pad - S
+            xh_p = jnp.pad(xh, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, padlen), (0, 0)))
+            Bm_p = jnp.pad(Bm, ((0, 0), (0, padlen), (0, 0)))
+            Cm_p = jnp.pad(Cm, ((0, 0), (0, padlen), (0, 0)))
+        else:
+            xh_p, dt_p, Bm_p, Cm_p = xh, dt, Bm, Cm
+        y, hT = _ssd_chunked(xh_p, dt_p, A, Bm_p, Cm_p, Q)
+        y = y[:, :S]
+        out_state = {"ssm": hT, "conv": new_conv}
+    else:
+        # recurrent decode: h' = exp(dt*A) h + dt * B (outer) x ; y = C . h
+        hs = state["ssm"].astype(jnp.float32)                 # (B,H,N,P)
+        ys = []
+        for t in range(S):                                    # S==1 for decode
+            dA = jnp.exp(dt[:, t] * A)                        # (B,H)
+            upd = jnp.einsum("bn,bh,bhp->bhnp", Bm[:, t].astype(jnp.float32),
+                             dt[:, t], xh[:, t].astype(jnp.float32))
+            hs = hs * dA[..., None, None] + upd
+            ys.append(jnp.einsum("bn,bhnp->bhp", Cm[:, t].astype(jnp.float32), hs))
+        y = jnp.stack(ys, axis=1)                             # (B,S,H,P)
+        out_state = {"ssm": hs, "conv": new_conv}
+
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, S, d_inner).astype(dt_model)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z)
+    y = apply_rmsnorm(p["gate_norm"], y, cfg.norm_eps)
+    out = y @ p["out_proj"]["w"].astype(dt_model)
+    return x + shard(out, "btd"), out_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_inner, H, N, Pd, W = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, H, N, Pd), jnp.float32),
+        "conv": jnp.zeros((batch, W - 1, d_inner + 2 * N), dtype),
+    }

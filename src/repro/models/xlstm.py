@@ -1,0 +1,290 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, strictly recurrent), following arXiv:2405.04517.
+
+TPU adaptation: the mLSTM recurrence is computed in its chunkwise-parallel
+form — within-chunk quadratic gating matrices on the MXU, across-chunk
+(d_k x d_v) matrix-state recurrence via a short lax.scan — mirroring how
+the Mamba2 SSD maps to TPU. sLSTM is inherently sequential (recurrent
+hidden mixing) and runs as a lax.scan over time with block-diagonal
+per-head recurrent matrices. Both have exact recurrent decode paths.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import params as P
+from repro.models.layers import apply_rmsnorm
+from repro.sharding.ctx import shard
+
+
+# ======================================================================
+# mLSTM
+# ======================================================================
+def _mlstm_dims(cfg: ModelConfig):
+    H = cfg.num_heads
+    d_in = int(cfg.d_model * cfg.xlstm.proj_factor_mlstm)
+    dk = d_in // H
+    return H, d_in, dk
+
+
+def decl_mlstm(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    H, d_in, dk = _mlstm_dims(cfg)
+    return {
+        "ln": P.norm(d),
+        "up_proj": P.linear(d, 2 * d_in, "embed", "ffn"),   # [x_in, z_gate]
+        # block-diagonal per-head projections (xLSTM paper §mLSTM): (H,dk,dk)
+        "wq": P.ParamDecl((H, dk, dk), (None, None, None), "normal",
+                          1.0 / math.sqrt(dk)),
+        "wk": P.ParamDecl((H, dk, dk), (None, None, None), "normal",
+                          1.0 / math.sqrt(dk)),
+        "wv": P.ParamDecl((H, dk, dk), (None, None, None), "normal",
+                          1.0 / math.sqrt(dk)),
+        "w_i": P.ParamDecl((d_in, H), ("ffn", None), "normal", 0.02),
+        "w_f": P.ParamDecl((d_in, H), ("ffn", None), "normal", 0.02),
+        "b_i": P.ParamDecl((H,), (None,), "zeros"),
+        "b_f": P.ParamDecl((H,), (None,), "ones"),
+        "out_norm": P.norm(d_in, "ffn"),
+        "down_proj": P.linear(d_in, d, "ffn", "embed"),
+    }
+
+
+def _mlstm_chunked(q, k, v, logf, logi, chunk: int):
+    """Stabilized chunkwise mLSTM.
+
+    q/k/v: (B,S,H,D) f32; logf/logi: (B,S,H) log forget(/input) gates.
+    Returns h: (B,S,H,D), final (C,n,m) state.
+    """
+    with jax.named_scope("mlstm_vmem"):
+        return _mlstm_chunked_impl(q, k, v, logf, logi, chunk)
+
+
+def _mlstm_chunked_impl(q, k, v, logf, logi, chunk: int):
+    B, S, H, D = q.shape
+    nc = S // chunk
+    f32 = jnp.float32
+    qc = q.reshape(B, nc, chunk, H, D)
+    kc = k.reshape(B, nc, chunk, H, D) / math.sqrt(D)
+    vc = v.reshape(B, nc, chunk, H, D)
+    lf = logf.reshape(B, nc, chunk, H)
+    li = logi.reshape(B, nc, chunk, H)
+
+    F = jnp.cumsum(lf, axis=2)                                # (B,nc,Q,H)
+    Fend = F[:, :, -1]                                        # (B,nc,H)
+
+    # intra-chunk log weights: W[z,l] = F_z - F_l + i_l  (z >= l)
+    Wlog = (F[:, :, :, None] - F[:, :, None, :] +
+            li[:, :, None, :])                                # (B,nc,Q,Q,H) z,l
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Wlog = jnp.where(tri[None, None, :, :, None], Wlog, -jnp.inf)
+
+    # inter-chunk: contribution of state entering the chunk decays by F_z
+    # log-scale bookkeeping with running max m for stabilization.
+    state_decay = F                                           # (B,nc,Q,H)
+
+    def body(carry, inp):
+        C_s, n_s, m_s = carry
+        qi, ki, vi, Wl, sd, li_c, F_c, Fe = inp
+        m_local = jnp.max(Wl, axis=2)
+        m_new = jnp.maximum(m_local, sd + m_s[:, None, :])
+        Dmat = jnp.exp(Wl - m_new[:, :, None, :])
+        s_intra = jnp.einsum("bzhd,blhd->bzlh", qi, ki)
+        h_intra = jnp.einsum("bzlh,bzlh,blhd->bzhd", s_intra, Dmat, vi)
+        n_intra = jnp.einsum("bzlh,bzlh->bzh", s_intra, Dmat)
+        inter_w = jnp.exp(sd + m_s[:, None, :] - m_new)
+        h_inter = jnp.einsum("bzhd,bhde->bzhe", qi, C_s) * inter_w[..., None]
+        n_inter = jnp.einsum("bzhd,bhd->bzh", qi, n_s) * inter_w
+        n_tot = jnp.maximum(jnp.abs(n_intra + n_inter), jnp.exp(-m_new))
+        h = (h_intra + h_inter) / n_tot[..., None]
+
+        # state update (stabilized): per key l weight exp(Fe - F_l + i_l)
+        kw_log = Fe[:, None, :] - F_c + li_c                  # (B,Q,H)
+        m_kw = jnp.max(kw_log, axis=1)                        # (B,H)
+        m_state = jnp.maximum(Fe + m_s, m_kw)
+        decay = jnp.exp(Fe + m_s - m_state)                   # (B,H)
+        kw = jnp.exp(kw_log - m_state[:, None, :])            # (B,Q,H)
+        C_new = (C_s * decay[..., None, None] +
+                 jnp.einsum("blh,blhd,blhe->bhde", kw, ki, vi))
+        n_new = (n_s * decay[..., None] +
+                 jnp.einsum("blh,blhd->bhd", kw, ki))
+        return (C_new, n_new, m_state), h
+
+    C0 = jnp.zeros((B, H, D, D), f32)
+    n0 = jnp.zeros((B, H, D), f32)
+    m0 = jnp.full((B, H), -1e30, f32)
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), Wlog.transpose(1, 0, 2, 3, 4),
+          state_decay.transpose(1, 0, 2, 3), li.transpose(1, 0, 2, 3),
+          F.transpose(1, 0, 2, 3), Fend.transpose(1, 0, 2))
+    (Cf, nf, mf), hs = jax.lax.scan(body, (C0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)
+    return h, (Cf, nf, mf)
+
+
+def _mlstm_recurrent_step(q, k, v, logf, logi, state):
+    """One-token exact recurrence. q/k/v: (B,H,D); logf/logi: (B,H)."""
+    C_s, n_s, m_s = state
+    m_new = jnp.maximum(logf + m_s, logi)
+    fg = jnp.exp(logf + m_s - m_new)
+    ig = jnp.exp(logi - m_new)
+    C_new = C_s * fg[..., None, None] + ig[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k, v)
+    n_new = n_s * fg[..., None] + ig[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)),
+                      jnp.exp(-m_new))
+    return num / den[..., None], (C_new, n_new, m_new)
+
+
+def apply_mlstm(p, cfg: ModelConfig, x: jax.Array, *,
+                state: Optional[Tuple] = None):
+    H, d_in, dk = _mlstm_dims(cfg)
+    B, S, _ = x.shape
+    dt = x.dtype
+    h = apply_rmsnorm(p["ln"], x, cfg.norm_eps)
+    up = h @ p["up_proj"]["w"].astype(dt)
+    xi, z = jnp.split(up, 2, axis=-1)
+    xi = shard(xi, "btf")
+
+    f32 = jnp.float32
+    xh = xi.reshape(B, S, H, dk)
+    q = jnp.einsum("bshd,hde->bshe", xh, p["wq"].astype(dt)).astype(f32)
+    k = jnp.einsum("bshd,hde->bshe", xh, p["wk"].astype(dt)).astype(f32)
+    v = jnp.einsum("bshd,hde->bshe", xh, p["wv"].astype(dt)).astype(f32)
+    logi = (xi.astype(f32) @ p["w_i"].astype(f32) + p["b_i"].astype(f32))
+    logf = jax.nn.log_sigmoid(
+        xi.astype(f32) @ p["w_f"].astype(f32) + p["b_f"].astype(f32))
+
+    if state is None:
+        Q = min(cfg.xlstm.chunk_size, S)
+        S_pad = -(-S // Q) * Q
+        if S_pad != S:
+            padw = ((0, 0), (0, S_pad - S))
+            q = jnp.pad(q, padw + ((0, 0), (0, 0)))
+            k = jnp.pad(k, padw + ((0, 0), (0, 0)))
+            v = jnp.pad(v, padw + ((0, 0), (0, 0)))
+            logf = jnp.pad(logf, padw + ((0, 0),))
+            logi = jnp.pad(logi, padw + ((0, 0),), constant_values=-1e30)
+        hseq, new_state = _mlstm_chunked(q, k, v, logf, logi, Q)
+        hseq = hseq[:, :S]
+    else:
+        outs = []
+        for t in range(S):
+            # chunked path scales k by 1/sqrt(dk); mirror exactly here
+            o, state = _mlstm_recurrent_step(
+                q[:, t], k[:, t] / math.sqrt(dk),
+                v[:, t], logf[:, t], logi[:, t], state)
+            outs.append(o)
+        hseq = jnp.stack(outs, axis=1)
+        new_state = state
+
+    hseq = hseq.reshape(B, S, d_in).astype(dt)
+    hseq = apply_rmsnorm(p["out_norm"], hseq, cfg.norm_eps)
+    hseq = hseq * jax.nn.silu(z)
+    out = hseq @ p["down_proj"]["w"].astype(dt)
+    return x + shard(out, "btd"), new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    H, d_in, dk = _mlstm_dims(cfg)
+    return (jnp.zeros((batch, H, dk, dk), jnp.float32),
+            jnp.zeros((batch, H, dk), jnp.float32),
+            jnp.full((batch, H), -1e30, jnp.float32))
+
+
+# ======================================================================
+# sLSTM
+# ======================================================================
+def _slstm_dims(cfg: ModelConfig):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    return H, dh
+
+
+def decl_slstm(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    H, dh = _slstm_dims(cfg)
+    d_up = int(cfg.d_model * cfg.xlstm.proj_factor_slstm)
+    gates = {}
+    for g in ("z", "i", "f", "o"):
+        gates[f"w_{g}"] = P.linear(d, d, "embed", "q_feat")
+        # block-diagonal recurrent mixing: per-head (dh, dh)
+        gates[f"r_{g}"] = P.ParamDecl((H, dh, dh), (None, None, None),
+                                      "normal", 1.0 / math.sqrt(dh))
+        gates[f"b_{g}"] = P.ParamDecl((d,), ("embed",),
+                                      "ones" if g == "f" else "zeros")
+    return {
+        "ln": P.norm(d),
+        **gates,
+        "out_norm": P.norm(d),
+        "up": P.linear(d, d_up, "embed", "ffn"),
+        "gate": P.linear(d, d_up, "embed", "ffn"),
+        "down": P.linear(d_up, d, "ffn", "embed"),
+    }
+
+
+def _slstm_cell(p, cfg, xt, carry):
+    """xt: (B,d) pre-activations W·x already applied outside? No: full cell."""
+    h_prev, c_prev, n_prev, m_prev = carry                    # (B,d) each, m (B,d)
+    H, dh = _slstm_dims(cfg)
+    B = h_prev.shape[0]
+    hb = h_prev.reshape(B, H, dh)
+
+    def rmix(r):                                              # (H,dh,dh)
+        return jnp.einsum("bhd,hde->bhe", hb, r).reshape(B, H * dh)
+
+    z = jnp.tanh(xt["z"] + rmix(p["r_z"].astype(jnp.float32)))
+    o = jax.nn.sigmoid(xt["o"] + rmix(p["r_o"].astype(jnp.float32)))
+    logi = xt["i"] + rmix(p["r_i"].astype(jnp.float32))
+    logf = jax.nn.log_sigmoid(xt["f"] + rmix(p["r_f"].astype(jnp.float32)))
+
+    m_new = jnp.maximum(logf + m_prev, logi)
+    ig = jnp.exp(logi - m_new)
+    fg = jnp.exp(logf + m_prev - m_new)
+    c_new = fg * c_prev + ig * z
+    n_new = jnp.maximum(fg * n_prev + ig, jnp.exp(-m_new))
+    h_new = o * c_new / n_new
+    return h_new, c_new, n_new, m_new
+
+
+def apply_slstm(p, cfg: ModelConfig, x: jax.Array, *,
+                state: Optional[Tuple] = None):
+    B, S, d = x.shape
+    dt = x.dtype
+    f32 = jnp.float32
+    h = apply_rmsnorm(p["ln"], x, cfg.norm_eps)
+    pre = {g: (h @ p[f"w_{g}"]["w"].astype(dt)).astype(f32) +
+              p[f"b_{g}"].astype(f32)
+           for g in ("z", "i", "f", "o")}
+
+    if state is None:
+        zero = jnp.zeros((B, d), f32)
+        carry = (zero, zero, jnp.ones((B, d), f32), jnp.zeros((B, d), f32))
+    else:
+        carry = state
+
+    def step(carry, xt):
+        new = _slstm_cell(p, cfg, xt, carry)
+        return new, new[0]
+
+    xs = {g: pre[g].transpose(1, 0, 2) for g in pre}
+    carry, hs = jax.lax.scan(step, carry, xs)
+    hseq = hs.transpose(1, 0, 2).astype(dt)                   # (B,S,d)
+    hseq = apply_rmsnorm(p["out_norm"], hseq, cfg.norm_eps)
+    # post-cell gated up/down projection (xLSTM block structure)
+    u = jax.nn.gelu(hseq @ p["up"]["w"].astype(dt))
+    g = hseq @ p["gate"]["w"].astype(dt)
+    out = (u * jax.nn.sigmoid(g)) @ p["down"]["w"].astype(dt)
+    return x + shard(out, "btd"), carry
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    zero = jnp.zeros((batch, d), jnp.float32)
+    return (zero, zero, jnp.ones((batch, d), jnp.float32),
+            jnp.zeros((batch, d), jnp.float32))

@@ -1,0 +1,42 @@
+"""Model zoo facade: build models from configs; analytic parameter counts."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import params as P
+from repro.models.lm import LM
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Parameter count derived from the actual declaration tree.
+
+    active_only: for MoE, count only experts_per_token of num_experts routed
+    experts (plus everything else) — the N_active used for MODEL_FLOPS.
+    """
+    model = LM(cfg)
+    decl = model.decl()
+    total = P.count_tree(decl)
+    if active_only and cfg.moe is not None:
+        m = cfg.moe
+        # routed expert params per layer (up+gate+down)
+        per_expert = (2 * cfg.d_model * m.expert_d_ff +
+                      m.expert_d_ff * cfg.d_model)
+        inactive = (m.num_experts - m.experts_per_token) * per_expert
+        total -= inactive * cfg.num_layers
+    return int(total)
+
+
+def model_flops_per_token(cfg: ModelConfig) -> float:
+    """MODEL_FLOPS/token = 6*N (dense) or 6*N_active (MoE), N excluding the
+    embedding table (standard convention) plus explicit attention flops are
+    NOT included here — this is the §Roofline 'useful flops' convention."""
+    n = count_params_analytic(cfg, active_only=True)
+    n -= cfg.padded_vocab * cfg.d_model      # embedding gather is not a matmul
+    return 6.0 * n

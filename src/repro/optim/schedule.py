@@ -1,0 +1,15 @@
+"""Warmup-cosine learning-rate schedule (pure function of step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def lr_at(tc: TrainConfig, step) -> jnp.ndarray:
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tc.warmup_steps) /
+                    jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tc.learning_rate * warm * (0.1 + 0.9 * cos)

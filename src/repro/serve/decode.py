@@ -1,0 +1,37 @@
+"""Serve-step factory: one-token batched decode with sharded KV cache.
+
+With ``tp_serve`` the cache is sequence-chunk sharded over "model": each
+shard computes attention over its chunk and XLA decomposes the softmax
+reduction into the flash-decoding partial-max/denominator combine. Works
+for any head count and any cache length (incl. 500k).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.ctx import sharding_ctx
+
+
+def make_serve_step(model, strategy=None, greedy: bool = True):
+    sharder = strategy.sharder() if strategy is not None else None
+
+    def serve_step(params, cache, tokens):
+        """tokens: (B,1) int32 -> (next_tokens (B,1), new_cache)."""
+        with sharding_ctx(sharder):
+            logits, new_cache = model.decode_step(params, cache, tokens)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return nxt, new_cache
+    return serve_step
+
+
+def make_prefill_step(model, strategy=None):
+    def prefill_step(params, batch):
+        with sharding_ctx(strategy.sharder() if strategy else None):
+            logits, _ = model.forward(
+                params, batch["tokens"],
+                img=batch.get("img"), frames=batch.get("frames"))
+        return logits
+    return prefill_step

@@ -1,0 +1,145 @@
+"""Flash-decoding under shard_map: sequence-chunk-sharded KV cache.
+
+GSPMD's automatic plan for one-token decode against a seq-sharded cache
+all-gathers the full K/V per layer (measured: 2 GB/layer/token at qwen3
+scale — 56 GB/device/token). The manual plan is textbook flash-decoding:
+
+  * the cache stays sharded in sequence chunks over `seq_axes`;
+  * the new token's K/V row is written by the one shard that owns slot
+    `idx` (clipped-index DUS — O(1) work, no copies, no gathers);
+  * every shard computes partial attention over its chunk with a running
+    max/denominator, and partials combine with one tiny pmax+psum.
+
+Works for any head count, any batch, any cache length (incl. 500k), and
+is exact (same math as ref.attention_ref).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as PS
+
+from repro.train.fused_xent import shard_map  # version-compat wrapper
+
+
+def _axis_index(names: Tuple[str, ...], mesh) -> jax.Array:
+    idx = jnp.zeros((), jnp.int32)
+    for n in names:
+        idx = idx * mesh.shape[n] + jax.lax.axis_index(n)
+    return idx
+
+
+def decode_attention_sharded(q, k_new, v_new, ck, cv, idx, *, mesh,
+                             batch_axes: Tuple[str, ...],
+                             seq_axes: Tuple[str, ...]):
+    """q: (B,1,Hq,D); k_new/v_new: (B,1,Hkv,D); ck/cv: (B,S,Hkv,D);
+    idx: scalar int32 (write position == number of valid tokens so far).
+    Returns (out (B,1,Hq,D), new_ck, new_cv)."""
+    B, S = ck.shape[0], ck.shape[1]
+    Hq, D = q.shape[2], q.shape[3]
+    Hkv = ck.shape[2]
+    G = Hq // Hkv
+    n_seq = int(np.prod([mesh.shape[a] for a in seq_axes]))
+    chunk = S // n_seq
+    scale = 1.0 / np.sqrt(D)
+
+    b = batch_axes if batch_axes else None
+    q_spec = PS(b, None, None, None)
+    c_spec = PS(b, seq_axes, None, None)
+
+    def local(q_l, kn, vn, ck_l, cv_l, idx_l):
+        f32 = jnp.float32
+        off = _axis_index(seq_axes, mesh) * chunk
+        lpos = idx_l - off
+        in_r = (lpos >= 0) & (lpos < chunk)
+        li = jnp.clip(lpos, 0, chunk - 1)
+        # write (or harmlessly rewrite) one row
+        row_k = jax.lax.dynamic_slice_in_dim(ck_l, li, 1, 1)
+        row_v = jax.lax.dynamic_slice_in_dim(cv_l, li, 1, 1)
+        row_k = jnp.where(in_r, kn.astype(ck_l.dtype), row_k)
+        row_v = jnp.where(in_r, vn.astype(cv_l.dtype), row_v)
+        ck_n = jax.lax.dynamic_update_slice_in_dim(ck_l, row_k, li, 1)
+        cv_n = jax.lax.dynamic_update_slice_in_dim(cv_l, row_v, li, 1)
+
+        # local partial attention over my chunk
+        qg = q_l.reshape(q_l.shape[0], Hkv, G, D)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qg, ck_n.astype(q_l.dtype),
+                       preferred_element_type=f32) * scale
+        pos = off + jnp.arange(chunk)
+        valid = pos <= idx_l                       # includes the new token
+        s = jnp.where(valid[None, None, None, :], s, -1e30)
+        m = jnp.max(s, axis=-1)                    # (b,h,g)
+        p = jnp.exp(s - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bhgk,bkhd->bhgd", p, cv_n.astype(q_l.dtype),
+                       preferred_element_type=f32)
+        # combine across seq shards (flash-decoding reduction)
+        gm = jax.lax.pmax(m, seq_axes)
+        corr = jnp.exp(m - gm)
+        l = jax.lax.psum(l * corr, seq_axes)
+        o = jax.lax.psum(o * corr[..., None], seq_axes)
+        out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q_l.dtype)
+        return out.reshape(q_l.shape[0], 1, Hq, D), ck_n, cv_n
+
+    fn = shard_map(local, mesh,
+                   (q_spec, q_spec, q_spec, c_spec, c_spec, PS()),
+                   (q_spec, c_spec, c_spec))
+    return fn(q, k_new, v_new, ck, cv, idx)
+
+
+def cross_attention_sharded(q, ck, cv, *, mesh, batch_axes, seq_axes):
+    """Read-only sharded cross-attention (precomputed KV, e.g. encoder out
+    or image tokens). Same combine, no update."""
+    B, S = ck.shape[0], ck.shape[1]
+    Hq, D = q.shape[2], q.shape[3]
+    Hkv = ck.shape[2]
+    G = Hq // Hkv
+    Sq = q.shape[1]
+    n_seq = int(np.prod([mesh.shape[a] for a in seq_axes]))
+    scale = 1.0 / np.sqrt(D)
+    b = batch_axes if batch_axes else None
+    q_spec = PS(b, None, None, None)
+    c_spec = PS(b, seq_axes, None, None)
+
+    def local(q_l, ck_l, cv_l):
+        f32 = jnp.float32
+        qg = q_l.reshape(q_l.shape[0], Sq, Hkv, G, D)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, ck_l.astype(q_l.dtype),
+                       preferred_element_type=f32) * scale
+        m = jnp.max(s, axis=-1)
+        p = jnp.exp(s - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bqhgk,bkhd->bqhgd", p, cv_l.astype(q_l.dtype),
+                       preferred_element_type=f32)
+        gm = jax.lax.pmax(m, seq_axes)
+        corr = jnp.exp(m - gm)
+        l = jax.lax.psum(l * corr, seq_axes)
+        o = jax.lax.psum(o * corr[..., None], seq_axes)
+        out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q_l.dtype)
+        return out.reshape(q_l.shape[0], Sq, Hq, D)
+
+    fn = shard_map(local, mesh, (q_spec, c_spec, c_spec), q_spec)
+    return fn(q, ck, cv)
+
+
+def decode_shard_plan(sharder, batch: int, seq: int):
+    """Mirror of TpServe.cache_specs: (batch_axes, seq_axes) or None."""
+    if sharder is None or "model" not in sharder.mesh.shape:
+        return None
+    mesh = sharder.mesh
+    dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    dpn = int(np.prod([mesh.shape[a] for a in dp]))
+    if batch % dpn == 0:
+        if seq >= 1024 and seq % mesh.shape["model"] == 0:
+            return dp, ("model",)
+        return None
+    full = dp + ("model",)
+    n = int(np.prod([mesh.shape[a] for a in full]))
+    if seq >= 1024 and seq % n == 0:
+        return (), full
+    if seq >= 1024 and seq % mesh.shape["model"] == 0:
+        return (), ("model",)
+    return None

@@ -1,0 +1,32 @@
+"""LM losses. Written GSPMD-friendly: the label log-prob is a one-hot
+contraction over the (possibly vocab-sharded) logits dim, so no device ever
+materializes a gathered logits tensor."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.ctx import shard
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 0.0):
+    """logits: (B,S,V); labels: (B,S) int32. Returns (loss, metrics)."""
+    lf = shard(logits.astype(jnp.float32), "btv")
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    shifted = lf - m
+    sumexp = jnp.sum(jnp.exp(shifted), axis=-1)
+    lse = jnp.log(sumexp) + m[..., 0]
+    # one-hot sharded like the logits, or it replicates (B,S,V) per device
+    onehot = shard(jax.nn.one_hot(labels, lf.shape[-1], dtype=jnp.bfloat16),
+                   "btv")
+    ll = jnp.einsum("bsv,bsv->bs", lf, onehot,
+                    preferred_element_type=jnp.float32)
+    nll = lse - ll
+    loss = jnp.mean(nll)
+    metrics = {"nll": loss}
+    if z_loss:
+        zl = z_loss * jnp.mean(jnp.square(lse))
+        loss = loss + zl
+        metrics["z_loss"] = zl
+    return loss, metrics

@@ -1,0 +1,43 @@
+"""Train state: bf16 compute params + f32 master/moments (ZeRO-1 layout)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any          # compute dtype (bf16), strategy.param_specs
+    master: Any          # f32, fully sharded (opt_specs)
+    opt: adamw.AdamWState  # f32, fully sharded
+    step: jax.Array      # scalar int32
+
+
+def create(model, key, compute_dtype=jnp.bfloat16) -> TrainState:
+    master = model.init(key, dtype=jnp.float32)
+    params = jax.tree_util.tree_map(lambda p: p.astype(compute_dtype), master)
+    return TrainState(params=params, master=master, opt=adamw.init(master),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def abstract(model, compute_dtype=jnp.bfloat16) -> TrainState:
+    """ShapeDtypeStruct state (no allocation) for AOT lowering."""
+    master = model.abstract_params(jnp.float32)
+    cast = lambda dt: jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dt), master)
+    return TrainState(params=cast(compute_dtype), master=master,
+                      opt=adamw.AdamWState(m=cast(jnp.float32), v=cast(jnp.float32)),
+                      step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def state_specs(model, strategy):
+    """PartitionSpec tree matching TrainState."""
+    import jax.sharding as shd
+    p_specs = strategy.param_specs(model)
+    o_specs = strategy.opt_specs(model)
+    return TrainState(params=p_specs, master=o_specs,
+                      opt=adamw.AdamWState(m=o_specs, v=o_specs),
+                      step=shd.PartitionSpec())

@@ -1,0 +1,197 @@
+"""JXPerf-JAX core: reservoir properties (hypothesis), Definitions 1-3 on
+crafted programs, Tier-3 detectors, pair-table merge semantics."""
+import collections
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ProfilerConfig
+from repro.core.context import PairTable
+from repro.core.detectors import TrainingDetectors
+from repro.core.interpreter import profile_fn
+from repro.core.reservoir import ReservoirWatchpoints, Watchpoint
+
+
+def _wp(i):
+    return Watchpoint(address=i, offset=0, size=4, value=i, context=(f"c{i}",),
+                      trap_type="W_TRAP")
+
+
+# ----------------------------------------------------------------------
+# Reservoir (§5.2)
+# ----------------------------------------------------------------------
+@given(st.integers(1, 4), st.integers(1, 200), st.integers(0, 10_000))
+@settings(max_examples=50, deadline=None)
+def test_reservoir_slot_invariant(nslots, nsamples, seed):
+    """Never more than N armed; armed set is always a subset of samples."""
+    rw = ReservoirWatchpoints(nslots, seed)
+    for i in range(nsamples):
+        rw.on_sample(_wp(i))
+        armed = rw.armed()
+        assert len(armed) <= nslots
+        assert all(0 <= w.address < nsamples for w in armed)
+    s = rw.stats
+    assert s["armed"] + s["replaced"] + s["rejected"] == nsamples
+
+
+def test_reservoir_uniform_survival():
+    """With 1 slot and k samples, each sample survives w.p. ~1/k (paper's
+    central claim; chi-square-ish tolerance over many trials)."""
+    k, trials = 8, 4000
+    counts = collections.Counter()
+    for t in range(trials):
+        rw = ReservoirWatchpoints(1, seed=t)
+        for i in range(k):
+            rw.on_sample(_wp(i))
+        counts[rw.armed()[0].address] += 1
+    expect = trials / k
+    for i in range(k):
+        assert abs(counts[i] - expect) < 0.35 * expect, (i, counts[i], expect)
+
+
+def test_reservoir_trap_frees_slot():
+    rw = ReservoirWatchpoints(2, 0)
+    w1, w2 = _wp(1), _wp(2)
+    rw.on_sample(w1)
+    rw.on_sample(w2)
+    rw.disarm(w1)
+    assert len(rw.armed()) == 1
+    assert rw.on_sample(_wp(3)) is True      # freed slot re-armed for sure
+    rw.disarm_all()
+    assert rw.armed() == []
+
+
+# ----------------------------------------------------------------------
+# Tier-1 per Definitions 1-3
+# ----------------------------------------------------------------------
+CFG = ProfilerConfig(enabled=True, period=20, num_watchpoints=4)
+
+
+def test_silent_loads_linear_search():
+    """Paper §6 Collections#588 analogue: repeated traversal of an
+    unchanged collection shows up as silent loads."""
+    def linear_search(keys, arr):
+        def body(c, k):
+            return c + jnp.any(arr == k).astype(jnp.int32), None
+        out, _ = jax.lax.scan(body, jnp.int32(0), keys)
+        return out
+    rep = profile_fn(linear_search, jnp.arange(48) % 7, jnp.arange(256), cfg=CFG)
+    assert rep.fractions()["silent_load"] > 0.5
+    # two-party attribution exists
+    assert rep.silent_loads.total_count > 0
+    (c1, c2), _ = rep.silent_loads.top(1)[0]
+    assert len(c1) >= 1 and len(c2) >= 1
+
+
+def test_silent_stores_loop_invariant_recompute():
+    """Paper §7.4 NPB-IS analogue: recomputing the same values every
+    iteration writes identical values to recycled addresses."""
+    def recompute(keys, x):
+        def body(c, k):
+            w = jnp.exp(x)                     # loop-invariant
+            return c + w.sum() * k, None
+        out, _ = jax.lax.scan(body, jnp.float32(0), keys)
+        return out
+    rep = profile_fn(recompute, jnp.ones((24,)), jnp.linspace(0, 1, 256), cfg=CFG)
+    assert rep.fractions()["silent_store"] > 0.5
+
+
+def test_dead_stores_unused_values():
+    """Values stored and overwritten without any intervening load."""
+    def wasteful(x):
+        acc = jnp.float32(0)
+        for i in range(20):
+            w = jnp.exp(x) * (i + 1)          # stored, never loaded
+            acc = acc + x.sum()
+        return acc, w
+    rep = profile_fn(wasteful, jnp.linspace(0, 1, 512), cfg=CFG)
+    assert rep.fractions()["dead_store"] > 0.3
+
+
+def test_efficient_program_is_clean():
+    def chain(x):
+        for _ in range(6):
+            x = jnp.tanh(x * 1.1 + 0.3)
+        return x.sum()
+    rep = profile_fn(chain, jnp.linspace(0, 1, 2048), cfg=CFG)
+    fr = rep.fractions()
+    assert fr["silent_load"] < 0.15
+    assert fr["dead_store"] < 0.15
+
+
+def test_fp_tolerance_controls_silent_store():
+    """1% tolerance (paper default): near-identical FP rewrites are silent,
+    large changes are not."""
+    def drift(keys, x, eps):
+        def body(c, k):
+            w = x * (1.0 + eps * k)            # changes by eps each iter
+            return c + w.sum(), None
+        out, _ = jax.lax.scan(body, jnp.float32(0), keys)
+        return out
+    small = profile_fn(drift, jnp.arange(24.0), jnp.linspace(1, 2, 128),
+                       jnp.float32(1e-5), cfg=CFG)
+    big = profile_fn(drift, jnp.arange(24.0), jnp.linspace(1, 2, 128),
+                     jnp.float32(0.5), cfg=CFG)
+    assert small.fractions()["silent_store"] > big.fractions()["silent_store"]
+
+
+def test_fractions_stable_across_periods():
+    """Paper Fig. 4: sampling period does not change the story."""
+    def linear_search(keys, arr):
+        def body(c, k):
+            return c + jnp.any(arr == k).astype(jnp.int32), None
+        out, _ = jax.lax.scan(body, jnp.int32(0), keys)
+        return out
+    args = (jnp.arange(48) % 7, jnp.arange(256))
+    fr = []
+    for period in (10, 40, 160):
+        cfg = ProfilerConfig(enabled=True, period=period, num_watchpoints=4)
+        fr.append(profile_fn(linear_search, *args, cfg=cfg)
+                  .fractions()["silent_load"])
+    assert max(fr) - min(fr) < 0.35, fr
+
+
+# ----------------------------------------------------------------------
+# Pair table / merge (§5.6)
+# ----------------------------------------------------------------------
+def test_pair_table_merge_rule():
+    a, b = PairTable(), PairTable()
+    a.add(("f:1",), ("g:2",), 4)
+    b.add(("f:1",), ("g:2",), 4)       # same pair -> coalesce
+    b.add(("f:1",), ("h:3",), 8)       # different trap ctx -> separate
+    a.merge(b)
+    assert a.pairs[(("f:1",), ("g:2",))].count == 2
+    assert len(a.pairs) == 2
+    assert a.total_bytes == 16
+
+
+# ----------------------------------------------------------------------
+# Tier-3
+# ----------------------------------------------------------------------
+def test_tier3_frozen_param_and_dead_grad():
+    det = TrainingDetectors(ProfilerConfig(enabled=True), leaves_per_step=8)
+    p0 = {"live": jnp.ones((64,)), "frozen": jnp.zeros((32,))}
+    g = {"live": jnp.ones((64,)), "frozen": jnp.zeros((32,))}
+    for step in range(8):
+        p1 = {"live": p0["live"] * (1.0 + 0.1 * (step + 1)),
+              "frozen": p0["frozen"]}
+        det.on_step(step, p0, p1, g)
+    kinds = {f.kind for f in det.report.findings}
+    paths = {f.path for f in det.report.findings}
+    assert "dead_grad_store" in kinds
+    assert any("frozen" in p for p in paths)
+    assert not any("live" in f.path for f in det.report.findings
+                   if f.kind == "silent_param_store")
+
+
+def test_tier3_duplicate_batch():
+    det = TrainingDetectors(ProfilerConfig(enabled=True))
+    b = {"tokens": jnp.arange(32)}
+    det.on_batch(0, b)
+    found = det.on_batch(1, b)                # identical content
+    assert found and found[0].kind == "silent_data_load"
+    fresh = det.on_batch(2, {"tokens": jnp.arange(32) + 1})
+    assert not fresh

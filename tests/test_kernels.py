@@ -1,0 +1,94 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp
+oracles, plus the custom-vjp flash (XLA twin) forward and backward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_xla import flash_xla
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.silent_compare import silent_compare
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(B, Sq, Skv, Hq, Hkv, D, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,Sq,Skv,Hq,Hkv,D,causal", [
+    (1, 64, 64, 4, 4, 32, True),
+    (2, 128, 128, 4, 2, 64, True),     # GQA
+    (1, 96, 160, 6, 3, 16, False),     # cross-ish, ragged seq
+    (2, 32, 32, 8, 1, 32, True),       # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_pallas_matches_ref(B, Sq, Skv, Hq, Hkv, D, causal, dtype):
+    q, k, v = _qkv(B, Sq, Skv, Hq, Hkv, D, dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("chunk", [32, 64, 128])
+def test_flash_xla_fwd_bwd(chunk):
+    q, k, v = _qkv(2, 128, 128, 4, 2, 32, jnp.float32)
+
+    def f_ref(q, k, v):
+        return (ref.attention_ref(q, k, v, causal=True) ** 2).sum()
+
+    def f_fx(q, k, v):
+        return (flash_xla(q, k, v, True, 0, chunk) ** 2).sum()
+
+    np.testing.assert_allclose(f_fx(q, k, v), f_ref(q, k, v), rtol=1e-5)
+    g1 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_fx, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   atol=5e-5, rtol=5e-4)
+
+
+def test_flash_xla_decode_offset_matches_masked_ref():
+    q, k, v = _qkv(1, 16, 80, 4, 4, 32, jnp.float32)
+    out = flash_xla(q, k, v, True, 64, 32)      # q starts at position 64
+    want = ref.attention_ref(q, k, v, causal=True, q_offset=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("n,tol", [(100, 0.0), (1000, 0.0), (4096, 0.01),
+                                   (100000, 0.01), (33000, 0.0)])
+def test_silent_compare_sweep(n, tol):
+    a = jax.random.normal(KEY, (n,))
+    nflip = max(1, n // 7)
+    b = a.at[:nflip].mul(2.0)
+    got = int(silent_compare(a, b, tol, interpret=True))
+    want = int(ref.silent_compare_ref(a, b, tol))
+    assert got == want == n - nflip
+
+
+def test_silent_compare_int_exact_and_nan():
+    a = jnp.arange(1000, dtype=jnp.float32)
+    assert int(silent_compare(a, a, 0.0, interpret=True)) == 1000
+    b = a.at[0].set(jnp.nan)
+    assert int(silent_compare(b, b, 0.0, interpret=True)) == 999
+
+
+@pytest.mark.parametrize("shape", [(8, 64), (37, 128), (3, 5, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_kernel_sweep(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    s = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],), jnp.float32)
+    got = rmsnorm(x, s, interpret=True)
+    want = ref.rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-5)

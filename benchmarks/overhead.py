@@ -84,4 +84,20 @@ def run():
         t1 = time.perf_counter() - t0
         rows.append((f"overhead.tier1_p{period}", t1 * 1e6,
                      f"vs_native={t1/t_native:.0f}x"))
+
+    # Tier-1 multi-epoch: trace→replay vs epoch-by-epoch re-interpretation
+    # (DESIGN.md §2). Same seed -> the replayed event stream is the
+    # recorded stream, so the profiles must be identical bit for bit.
+    pc = ProfilerConfig(enabled=True, period=5000)
+    t0 = time.perf_counter()
+    rep_re = profile_fn(fwd, small, cfg=pc, epochs=8, replay=False)
+    t_re = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rep_rp = profile_fn(fwd, small, cfg=pc, epochs=8, replay=True)
+    t_rp = time.perf_counter() - t0
+    identical = (rep_re == rep_rp
+                 and rep_re.fractions() == rep_rp.fractions())
+    rows.append(("overhead.tier1_reinterp_e8", t_re * 1e6, "baseline"))
+    rows.append(("overhead.tier1_replay_e8", t_rp * 1e6,
+                 f"speedup={t_re/t_rp:.1f}x|identical={identical}"))
     return rows

@@ -8,16 +8,18 @@ import jax.numpy as jnp
 
 from repro.configs import registry
 from repro.configs.base import ProfilerConfig
-from repro.core import analyze_waste, profile_fn, render
+from repro.core import merge, profile_fn, render
 from repro.launch.train import run as train_run
 
 
 def main():
-    # 1) end-to-end smoke train with Tier-3 detectors + Tier-2 waste report
+    # 1) end-to-end smoke train with Tier-3 detectors + Tier-2 waste
+    #    report — train_run returns one merged WasteProfile
     print("=" * 70)
     print("Training qwen3-1.7b (reduced) with Tier-3 detectors on:")
-    train_run("qwen3-1.7b", smoke=True, steps=15, batch=4, seq=64,
-              profile=True, waste_report=True, log_every=5)
+    _, train_profile = train_run("qwen3-1.7b", smoke=True, steps=15,
+                                 batch=4, seq=64, profile=True,
+                                 waste_report=True, log_every=5)
 
     # 2) Tier-1: profile a deliberately wasteful function
     print("=" * 70)
@@ -32,6 +34,11 @@ def main():
     rep = profile_fn(linear_search, jnp.arange(48) % 7, jnp.arange(256),
                      cfg=ProfilerConfig(enabled=True, period=100))
     print(render(rep, top_k=2))
+
+    # 3) every tier speaks the same schema: one report across all three
+    print("=" * 70)
+    print("Unified cross-tier profile (Tier-1 + Tier-2 + Tier-3 merged):")
+    print(render(merge(train_profile, rep), top_k=2))
 
 
 if __name__ == "__main__":

@@ -208,4 +208,7 @@ class ProfilerConfig:
     # FP approximate-equality tolerance (paper default: 1%)
     fp_tolerance: float = 0.01
     detect: Tuple[str, ...] = ("dead_store", "silent_store", "silent_load")
+    # Tier-3 silent-data-load LRU window: max batch-content digests kept
+    # (bounds detector memory over arbitrarily long runs)
+    batch_hash_window: int = 4096
     seed: int = 0

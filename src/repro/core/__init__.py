@@ -1,6 +1,14 @@
-"""JXPerf-JAX: the paper's contribution as a composable module.
+"""JXPerf-JAX core: the paper's contribution as a composable module.
 
-Three detection tiers (DESIGN.md §2):
+One measurement substrate (DESIGN.md §2):
+  events.py    typed memory-event stream, PMU-style geometric sampler,
+               reservoir watchpoints + trap classification (EventEngine),
+               trace→replay multi-epoch profiling (EventTrace)
+  findings.py  the unified Finding / WasteProfile schema every tier
+               emits: mergeable across epochs, shards and tiers;
+               lossless JSON round-trip
+
+Three detection tiers on top of it:
   Tier 1  runtime value profiler      (interpreter.profile_fn)
   Tier 2  compiled-HLO waste analysis (hlo_waste.analyze_waste)
   Tier 3  training-loop detectors     (detectors.TrainingDetectors)
@@ -8,8 +16,13 @@ plus the reservoir watchpoint manager (reservoir.ReservoirWatchpoints)
 and the trip-count-correct HLO cost model (hlo_cost.HloCostModel).
 """
 from repro.core.reservoir import ReservoirWatchpoints, Watchpoint  # noqa: F401
+from repro.core.events import (EventEngine, EventTrace, GeometricSampler,  # noqa: F401
+                               MemEvent, approx_equal, silent_mask)
+from repro.core.findings import (Finding, WasteProfile, merge,  # noqa: F401
+                                 merge_profiles)
 from repro.core.interpreter import JxInterpreter, profile_fn, Report  # noqa: F401
 from repro.core.detectors import TrainingDetectors, Tier3Report  # noqa: F401
 from repro.core.hlo_waste import analyze_waste, WasteReport  # noqa: F401
 from repro.core.hlo_cost import HloCostModel  # noqa: F401
-from repro.core.report import merge_reports, render  # noqa: F401
+from repro.core.report import (dump_json, load_json, merge_reports,  # noqa: F401
+                               merge_shards, render)

@@ -1,6 +1,8 @@
 """Tier-3: training-loop waste detectors (DESIGN.md §2) — the production
 always-on mode. Watches the *framework's own* memory traffic at step
-granularity with the same reservoir-sampled watchpoint discipline:
+granularity through the same substrate as Tier-1 (repro.core.events):
+parameter/gradient/batch accesses become MemEvents, sampled accesses arm
+reservoir watchpoints, and findings land in the unified WasteProfile:
 
   silent parameter stores — a parameter leaf whose post-optimizer value
       equals its pre-step value within tolerance (frozen/dead subnetwork,
@@ -8,51 +10,43 @@ granularity with the same reservoir-sampled watchpoint discipline:
   dead gradient stores    — gradient leaves that are (near-)all-zero: the
       backward pass produced bytes nobody needed (Def. 1 flavour);
   silent data loads       — repeated identical batches from the pipeline
-      (content hash), Def. 3 at the input boundary.
+      (MemEvent content digest), Def. 3 at the input boundary.
 
 The value comparison runs on-device via the silent_compare Pallas kernel
-(2 reads/element — roofline-minimal), so the per-step overhead is bounded
-by the sampled leaf set, mirroring the paper's 7%-overhead philosophy.
+(2 reads/element — roofline-minimal) using the substrate's single
+approximate-equality definition, so the per-step overhead is bounded by
+the sampled leaf set, mirroring the paper's 7%-overhead philosophy.
 """
 from __future__ import annotations
 
-import hashlib
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from collections import OrderedDict
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.configs.base import ProfilerConfig
+from repro.core.events import STORE, MemEvent
+from repro.core.findings import Finding, WasteProfile
 from repro.core.reservoir import ReservoirWatchpoints, Watchpoint
 from repro.kernels import ops
 
-
-@dataclass
-class StepFinding:
-    step: int
-    kind: str              # silent_param_store | dead_grad_store | silent_data_load
-    path: str
-    fraction: float
-
-
-@dataclass
-class Tier3Report:
-    findings: List[StepFinding] = field(default_factory=list)
-    checked: Dict[str, int] = field(default_factory=dict)
-    flagged: Dict[str, int] = field(default_factory=dict)
-
-    def fractions(self) -> Dict[str, float]:
-        return {k: self.flagged.get(k, 0) / v
-                for k, v in self.checked.items() if v}
-
-    def top(self, k: int = 10) -> List[StepFinding]:
-        return sorted(self.findings, key=lambda f: -f.fraction)[:k]
+# seed-era names: the unified profile/finding replace the ad-hoc pair
+Tier3Report = WasteProfile
+StepFinding = Finding
 
 
 def _leaf_paths(tree) -> List[Tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     return [(jax.tree_util.keystr(k), v) for k, v in flat]
+
+
+def _leaf_event(path: str, leaf) -> MemEvent:
+    # metadata comes from the array handle; the leaf itself is held by
+    # reference (no device->host transfer unless digest() is called)
+    return MemEvent(kind=STORE, address=hash(path) & 0x7FFFFFFF,
+                    nelems=int(leaf.size), itemsize=int(leaf.dtype.itemsize),
+                    values=leaf, ctx=(path,))
 
 
 class TrainingDetectors:
@@ -66,14 +60,24 @@ class TrainingDetectors:
         self.wp = ReservoirWatchpoints(self.cfg.num_watchpoints,
                                        self.cfg.seed)
         self.rng = np.random.RandomState(self.cfg.seed)
-        self.report = Tier3Report()
-        self._batch_hashes: Dict[str, int] = {}
+        self.report = WasteProfile(tier=3)
+        # bounded LRU of batch-content digests: a long run must not grow
+        # memory without limit (window from ProfilerConfig)
+        self._batch_hashes: "OrderedDict[str, int]" = OrderedDict()
+        self._hash_window = max(1, self.cfg.batch_hash_window)
+
+    def _found(self, step: int, kind: str, path: str,
+               frac: float, nbytes: float) -> Finding:
+        f = Finding(kind=kind, tier=3, c1=(path,), fraction=frac,
+                    step=step, bytes=nbytes, meta={"path": path})
+        self.report.add(f)
+        return f
 
     # ------------------------------------------------------------------
     def on_step(self, step: int, params_before, params_after,
-                grads=None) -> List[StepFinding]:
+                grads=None) -> List[Finding]:
         """Sample leaves; compare watched leaves before/after (Def. 2)."""
-        out: List[StepFinding] = []
+        out: List[Finding] = []
         before = dict(_leaf_paths(params_before))
         after = dict(_leaf_paths(params_after))
 
@@ -83,20 +87,23 @@ class TrainingDetectors:
             if path in after:
                 frac = float(ops.silent_fraction(before[path], after[path],
                                                  tol=self.tol))
-                self._bump("silent_param_store", frac > 0.99)
-                if frac > 0.99:
-                    f = StepFinding(step, "silent_param_store", path, frac)
-                    self.report.findings.append(f)
-                    out.append(f)
+                silent = frac > 0.99
+                self.report.observe("silent_param_store", silent)
+                if silent:
+                    ev = _leaf_event(path, after[path])
+                    out.append(self._found(step, "silent_param_store",
+                                           path, frac, ev.nbytes))
             self.wp.disarm(wp)
 
-        # arm new watchpoints on sampled leaves (reservoir discipline)
+        # arm new watchpoints on sampled leaf-store events (reservoir
+        # discipline over the substrate's event type)
         paths = list(after)
         for _ in range(min(self.leaves_per_step, len(paths))):
             p = paths[self.rng.randint(len(paths))]
+            ev = _leaf_event(p, after[p])
             self.wp.on_sample(Watchpoint(
-                address=hash(p) & 0x7FFFFFFF, offset=0, size=4,
-                value=None, context=(p,), trap_type="W_TRAP", meta=p))
+                address=ev.address, offset=0, size=ev.itemsize,
+                value=None, context=ev.ctx, trap_type="W_TRAP", meta=p))
 
         # dead gradient stores (value-agnostic: all-zero grad leaves)
         if grads is not None:
@@ -106,31 +113,27 @@ class TrainingDetectors:
                 zero_frac = float(ops.silent_fraction(
                     g, jax.numpy.zeros_like(g), tol=0.0))
                 dead = zero_frac > 0.99
-                self._bump("dead_grad_store", dead)
+                self.report.observe("dead_grad_store", dead)
                 if dead:
-                    f = StepFinding(step, "dead_grad_store", p, zero_frac)
-                    self.report.findings.append(f)
-                    out.append(f)
+                    ev = _leaf_event(p, g)
+                    out.append(self._found(step, "dead_grad_store", p,
+                                           zero_frac, ev.nbytes))
         return out
 
     # ------------------------------------------------------------------
-    def on_batch(self, step: int, batch) -> List[StepFinding]:
+    def on_batch(self, step: int, batch) -> List[Finding]:
         """Silent data loads: identical batch content re-delivered."""
-        out = []
+        out: List[Finding] = []
         for path, leaf in _leaf_paths(batch):
-            h = hashlib.blake2b(np.asarray(leaf).tobytes(),
-                                digest_size=8).hexdigest()
-            key = f"{path}:{h}"
+            ev = _leaf_event(path, leaf)
+            key = f"{path}:{ev.digest()}"
             dup = key in self._batch_hashes
-            self._bump("silent_data_load", dup)
+            self.report.observe("silent_data_load", dup)
             if dup:
-                f = StepFinding(step, "silent_data_load", path, 1.0)
-                self.report.findings.append(f)
-                out.append(f)
+                out.append(self._found(step, "silent_data_load", path,
+                                       1.0, ev.nbytes))
+                self._batch_hashes.move_to_end(key)
             self._batch_hashes[key] = step
+            while len(self._batch_hashes) > self._hash_window:
+                self._batch_hashes.popitem(last=False)
         return out
-
-    def _bump(self, kind: str, flagged: bool):
-        self.report.checked[kind] = self.report.checked.get(kind, 0) + 1
-        if flagged:
-            self.report.flagged[kind] = self.report.flagged.get(kind, 0) + 1

@@ -1,0 +1,265 @@
+"""Typed memory-event substrate shared by every tier (DESIGN.md §2).
+
+The paper's measurement discipline is a pipeline: memory accesses stream
+past a PMU-style sampler (geometric inter-sample gaps ≙ period-P PEBS);
+sampled accesses arm reservoir-managed software watchpoints; the next
+access to a watched location is the trap, classified per Definitions 1-3
+with ⟨C1,C2⟩ context-pair attribution. This module is that pipeline,
+extracted so Tier-1 (jaxpr interpretation), Tier-3 (training-loop
+detectors) and any future detector feed the *same* machinery:
+
+  MemEvent          one load/store over a logical buffer (+ value + ctx)
+  EventTrace        a recorded flat event stream (trace→replay profiling:
+                    interpret once, replay the trace for epochs 2..N)
+  GeometricSampler  the PMU analogue (one sample every ~period events)
+  EventEngine       sampler + watchpoints + trap classification, writing
+                    into a shared findings.WasteProfile
+
+plus the single approximate-equality helper (symmetric relative
+tolerance) used by both the interpreter's scalar compares and the
+silent_compare kernels — one definition of "silent" everywhere.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ProfilerConfig
+from repro.core.findings import WasteProfile
+from repro.core.reservoir import ReservoirWatchpoints, Watchpoint
+
+LOAD = "load"
+STORE = "store"
+
+
+# ----------------------------------------------------------------------
+# The one "silent" comparison (paper Defs. 2-3, FP tolerance default 1%).
+# Symmetric relative tolerance: |a-b| <= tol*max(|a|,|b|). The seed's
+# tol*|a| misclassified near-zero stores (a=0 made *any* b non-silent
+# while a=eps made huge b silent); max(|a|,|b|) is scale-symmetric.
+# ----------------------------------------------------------------------
+def silent_mask(a, b, tol: float):
+    """Elementwise silent-match mask; jnp/np arrays in, bool array out.
+    NaNs are never silent. tol=0 gives exact (integer) equality."""
+    import jax.numpy as jnp
+    mod = jnp if not isinstance(a, np.ndarray) else np
+    if tol == 0.0:
+        eq = a == b
+    else:
+        eq = mod.abs(a - b) <= tol * mod.maximum(mod.abs(a), mod.abs(b))
+    return eq & ~mod.isnan(a) & ~mod.isnan(b)
+
+
+def approx_equal(a, b, tol: float) -> bool:
+    """Scalar form of silent_mask — Tier-1's per-element trap compare."""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    if a.dtype.kind in "fc":
+        fa, fb = float(np.real(a)), float(np.real(b))
+        if np.isnan(fa) or np.isnan(fb):
+            return False
+        return abs(fa - fb) <= tol * max(abs(fa), abs(fb))
+    return bool(a == b)
+
+
+# ----------------------------------------------------------------------
+@dataclass
+class MemEvent:
+    """One load/store of `nelems` elements at logical address `address`."""
+    kind: str                       # LOAD | STORE
+    address: int
+    nelems: int
+    itemsize: int
+    values: Optional[np.ndarray]    # full stored/loaded value (by ref)
+    ctx: Tuple[str, ...]            # full calling context of the access
+
+    @property
+    def nbytes(self) -> int:
+        return self.nelems * self.itemsize
+
+    def value_at(self, offset: int):
+        flat = self.values.reshape(-1)
+        return flat[min(offset, flat.size - 1)]
+
+    def digest(self, size: int = 8) -> str:
+        """Content fingerprint (Tier-3 silent-data-load hashing). The only
+        MemEvent accessor that materializes the values on the host."""
+        arr = np.ascontiguousarray(np.asarray(self.values))
+        return hashlib.blake2b(arr.tobytes(), digest_size=size).hexdigest()
+
+
+class EventTrace:
+    """Flat recorded event stream of one profiled epoch.
+
+    Recording happens during the single concrete jaxpr evaluation; replay
+    pushes the identical stream through a fresh-epoch EventEngine without
+    re-binding a single primitive (values are held by reference)."""
+
+    def __init__(self):
+        self.events: List[MemEvent] = []
+
+    def append(self, ev: MemEvent) -> None:
+        self.events.append(ev)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self) -> Iterator[MemEvent]:
+        return iter(self.events)
+
+    @property
+    def element_events(self) -> int:
+        return sum(ev.nelems for ev in self.events)
+
+
+# ----------------------------------------------------------------------
+class GeometricSampler:
+    """PMU-period analogue: i.i.d. geometric gaps with mean `period`.
+
+    `advance(n)` moves past n element-events and returns the offsets of
+    the sampled ones (the same arithmetic the seed interpreter inlined)."""
+
+    def __init__(self, period: int, rng: np.random.RandomState):
+        self.period = max(1, period)
+        self.rng = rng
+        # the first gap is drawn lazily at the first advance(), so that
+        # construct-then-reset (the engine's epoch 0) costs one draw
+        self.next_sample: Optional[int] = None
+
+    def draw_gap(self) -> int:
+        return max(1, int(self.rng.geometric(1.0 / self.period)))
+
+    def reset(self) -> None:
+        """Epoch boundary: discard the partial gap; a fresh one is drawn
+        at the next advance() (the RNG stream continues across epochs)."""
+        self.next_sample = None
+
+    def advance(self, n: int) -> List[int]:
+        if self.next_sample is None:
+            self.next_sample = self.draw_gap()
+        hits: List[int] = []
+        pos = 0
+        remaining = n
+        while self.next_sample <= remaining:
+            pos += self.next_sample
+            hits.append(pos - 1)
+            remaining -= self.next_sample
+            self.next_sample = self.draw_gap()
+        self.next_sample -= remaining
+        return hits
+
+
+# ----------------------------------------------------------------------
+class EventEngine:
+    """Sampler + reservoir watchpoints + Defs. 1-3 trap classification.
+
+    Feed it MemEvents (live from an interpreter, or replayed from an
+    EventTrace); it writes pairs and estimator counters into `profile`."""
+
+    def __init__(self, cfg: Optional[ProfilerConfig] = None, tier: int = 1):
+        self.cfg = cfg or ProfilerConfig(enabled=True)
+        self.tier = tier
+        self.tol = self.cfg.fp_tolerance
+        self.detect = set(self.cfg.detect)
+        self.rng = np.random.RandomState(self.cfg.seed)
+        self.sampler = GeometricSampler(self.cfg.period, self.rng)
+        self.profile = WasteProfile(tier=tier,
+                                    sampling_period=self.sampler.period)
+        self.wp = {}
+        self.reset_epoch()
+
+    def reset_epoch(self) -> None:
+        """GC-epoch semantics: watchpoints never cross an epoch; the
+        reservoir restarts from its seed, the sampler draws a fresh gap."""
+        self.wp = {
+            STORE: ReservoirWatchpoints(self.cfg.num_watchpoints,
+                                        self.cfg.seed),
+            LOAD: ReservoirWatchpoints(self.cfg.num_watchpoints,
+                                       self.cfg.seed + 1),
+        }
+        self.sampler.reset()
+
+    # ------------------------------------------------------------------
+    def on_event(self, ev: MemEvent) -> None:
+        if ev.kind == STORE:
+            self._on_store(ev)
+        else:
+            self._on_load(ev)
+
+    def replay(self, trace: EventTrace) -> None:
+        """One epoch over a recorded trace (no primitive re-binding)."""
+        on_store, on_load = self._on_store, self._on_load
+        for ev in trace:
+            if ev.kind == STORE:
+                on_store(ev)
+            else:
+                on_load(ev)
+
+    def finalize(self) -> WasteProfile:
+        self.profile.watchpoint_stats = {
+            k: dict(v.stats) for k, v in self.wp.items()}
+        return self.profile
+
+    # ------------------------------------------------------------------
+    def _on_store(self, ev: MemEvent) -> None:
+        prof = self.profile
+        prof.bump_total("store_events", ev.nelems)
+        prof.bump_total("store_bytes", ev.nbytes)
+        self._check_traps(STORE, ev)
+        for off in self.sampler.advance(ev.nelems):
+            if "dead_store" in self.detect:
+                self.wp[STORE].on_sample(Watchpoint(
+                    address=ev.address, offset=off, size=ev.itemsize,
+                    value=None, context=ev.ctx, trap_type="RW_TRAP",
+                    meta="dead_store"))
+            if "silent_store" in self.detect:
+                self.wp[STORE].on_sample(Watchpoint(
+                    address=ev.address, offset=off, size=ev.itemsize,
+                    value=ev.value_at(off), context=ev.ctx,
+                    trap_type="W_TRAP", meta="silent_store"))
+
+    def _on_load(self, ev: MemEvent) -> None:
+        prof = self.profile
+        prof.bump_total("load_events", ev.nelems)
+        prof.bump_total("load_bytes", ev.nbytes)
+        self._check_traps(LOAD, ev)
+        if "silent_load" in self.detect:
+            for off in self.sampler.advance(ev.nelems):
+                self.wp[LOAD].on_sample(Watchpoint(
+                    address=ev.address, offset=off, size=ev.itemsize,
+                    value=ev.value_at(off), context=ev.ctx,
+                    trap_type="RW_TRAP", meta="silent_load"))
+
+    def _check_traps(self, access: str, ev: MemEvent) -> None:
+        prof = self.profile
+        for wp in self.wp[STORE].matching(
+                lambda w: w.address == ev.address and w.offset < ev.nelems):
+            if wp.meta == "dead_store":
+                # Def. 1: store;store with no intervening load is dead
+                hit = access == STORE
+                prof.observe("dead_store", hit)
+                if hit:
+                    prof.add_pair("dead_store", self.tier, wp.context,
+                                  ev.ctx, wp.size)
+                self.wp[STORE].disarm(wp)
+            elif wp.meta == "silent_store" and access == STORE:
+                # Def. 2: overwrite with the value already there
+                hit = approx_equal(wp.value, ev.value_at(wp.offset), self.tol)
+                prof.observe("silent_store", hit)
+                if hit:
+                    prof.add_pair("silent_store", self.tier, wp.context,
+                                  ev.ctx, wp.size)
+                self.wp[STORE].disarm(wp)
+        for wp in self.wp[LOAD].matching(
+                lambda w: w.address == ev.address and w.offset < ev.nelems):
+            if access == LOAD:
+                # Def. 3: load of the value already loaded
+                hit = approx_equal(wp.value, ev.value_at(wp.offset), self.tol)
+                prof.observe("silent_load", hit)
+                if hit:
+                    prof.add_pair("silent_load", self.tier, wp.context,
+                                  ev.ctx, wp.size)
+            self.wp[LOAD].disarm(wp)

@@ -16,7 +16,9 @@ The TPU analogue of JXPerf inspecting JITted machine code: we scan the
 
 Built on the trip-count-correct cost model (repro.core.hlo_cost); every
 finding carries its effective multiplier and op_name provenance, i.e. the
-same two-party attribution discipline as the runtime tiers.
+same two-party attribution discipline as the runtime tiers. Alongside the
+detailed per-op lists, the analysis emits the unified
+findings.WasteProfile (tier 2), mergeable with Tier-1/Tier-3 profiles.
 """
 from __future__ import annotations
 
@@ -25,6 +27,7 @@ from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List
 
+from repro.core.findings import Finding, WasteProfile
 from repro.core.hlo_cost import (HloCostModel, _CALL_RE, _COLLECTIVES,
                                  _nbytes)
 
@@ -35,6 +38,8 @@ class WasteReport:
     recompute: List[Dict] = field(default_factory=list)
     reshard_copies: List[Dict] = field(default_factory=list)
     totals: Dict[str, float] = field(default_factory=dict)
+    # the unified cross-tier view of the same findings (DESIGN.md §2)
+    profile: WasteProfile = field(default_factory=lambda: WasteProfile(tier=2))
 
     def summary(self) -> str:
         out = ["== JXPerf-JAX Tier-2 (compiled HLO waste) =="]
@@ -87,7 +92,9 @@ def analyze_waste(hlo_text: str, top_k: int = 20) -> WasteReport:
             })
     red_total = 0.0
     for fp, items in seen.items():
-        if len(items) > 1 and items[0]["wire_bytes"] > 0:
+        redundant = len(items) > 1 and items[0]["wire_bytes"] > 0
+        rep.profile.observe("redundant_collective", redundant)
+        if redundant:
             extra = sum(it["wire_bytes"] for it in items[1:])
             red_total += extra
             rep.redundant_collectives.append({
@@ -95,6 +102,11 @@ def analyze_waste(hlo_text: str, top_k: int = 20) -> WasteReport:
                 "copies": len(items), "wire_bytes": extra,
                 "op_name": items[0]["op_name"],
             })
+            rep.profile.add(Finding(
+                kind="redundant_collective", tier=2,
+                c1=(items[0]["op_name"] or f"{fp[0]} {items[0]['shape']}",),
+                count=len(items), bytes=extra,
+                meta={"kind": fp[0], "shape": items[0]["shape"]}))
     rep.redundant_collectives.sort(key=lambda r: -r["wire_bytes"])
     rep.redundant_collectives = rep.redundant_collectives[:top_k]
 
@@ -114,11 +126,15 @@ def analyze_waste(hlo_text: str, top_k: int = 20) -> WasteReport:
             dup[fp].append(c.flops * m)
     rec_total = 0.0
     for fp, fl in dup.items():
-        if len(fl) > 1:
+        duplicated = len(fl) > 1
+        rep.profile.observe("recompute", duplicated)
+        if duplicated:
             extra = sum(sorted(fl)[:-1])
             rec_total += extra
             rep.recompute.append({"fingerprint": fp, "copies": len(fl),
                                   "flops": extra})
+            rep.profile.add(Finding(kind="recompute", tier=2, c1=(fp,),
+                                    count=len(fl), flops=extra))
     rep.recompute.sort(key=lambda r: -r["flops"])
     rep.recompute = rep.recompute[:top_k]
 
@@ -132,14 +148,20 @@ def analyze_waste(hlo_text: str, top_k: int = 20) -> WasteReport:
             if inst.op not in ("copy", "transpose"):
                 continue
             b = _nbytes(inst.result_type)
-            if b * m < 64e6:
+            large = b * m >= 64e6
+            rep.profile.observe("reshard_copy", large)
+            if not large:
                 continue
             resh_total += 2 * b * m
             meta = re.search(r'op_name="([^"]+)"', inst.line)
+            op_name = meta.group(1) if meta else ""
             rep.reshard_copies.append({
                 "op": inst.op, "shape": inst.result_type.split("{")[0],
-                "bytes": 2 * b * m,
-                "op_name": meta.group(1) if meta else ""})
+                "bytes": 2 * b * m, "op_name": op_name})
+            rep.profile.add(Finding(
+                kind="reshard_copy", tier=2,
+                c1=(op_name or f"{inst.op} {inst.result_type.split('{')[0]}",),
+                bytes=2 * b * m, meta={"op": inst.op}))
     rep.reshard_copies.sort(key=lambda r: -r["bytes"])
     rep.reshard_copies = rep.reshard_copies[:top_k]
 
@@ -148,4 +170,6 @@ def analyze_waste(hlo_text: str, top_k: int = 20) -> WasteReport:
         "recompute_flops": rec_total,
         "reshard_bytes": resh_total,
     }
+    for k, v in rep.totals.items():
+        rep.profile.bump_total(k, v)
     return rep

@@ -5,28 +5,27 @@ The program's jaxpr is interpreted op by op against a modeled flat address
 space: every equation output is a STORE over a buffer placed by a reusing
 allocator (buffers free at last use, addresses recycle — the moral
 equivalent of the mutable heap JXPerf watches), every operand read is a
-LOAD. Memory events stream past a PMU-style sampler (period P); sampled
-events arm software watchpoints managed by the paper's reservoir scheme;
-the next access to a watched location is the trap, classified per
-Definitions 1-3:
+LOAD. Memory events stream through the shared event substrate
+(repro.core.events): a PMU-style geometric sampler, the paper's reservoir
+watchpoints, traps classified per Definitions 1-3 with ⟨C1,C2⟩
+attribution into one findings.WasteProfile.
 
-  dead store    S1;S2 stores, no intervening load         (value-agnostic)
-  silent store  S2 stores the value S1 stored             (fp tol, def 1%)
-  silent load   L2 loads the value L1 loaded
-
-Attribution is a ⟨C1,C2⟩ pair of full calling contexts from jaxpr
-source_info. Epochs: each profiled call is one epoch (jit-step boundary ≡
-GC epoch: watchpoints never cross it). Scan/while/cond/pjit/remat bodies
-are interpreted recursively with buffer identity preserved across
-iterations, so a linear search in a scan traps exactly like the paper's
-``contains()`` case, and loop-invariant recomputation writes the same
-values to the same recycled addresses like the paper's NPB-IS case.
+Multi-epoch profiling is trace→replay: the jaxpr is evaluated concretely
+ONCE while recording a flat EventTrace (address, extent, value reference,
+context per access); epochs 2..N replay that trace through a fresh-epoch
+EventEngine. The program is deterministic, so replaying the recorded
+stream is event-for-event identical to re-interpreting it — minus the N×
+primitive re-binding, which is where all the interpreter time goes
+(benchmarks/overhead.py: tier1_replay vs tier1_reinterp). Epoch semantics
+are unchanged: each epoch is a GC epoch (watchpoints never cross it),
+scan/while/cond/pjit/remat bodies are interpreted recursively with buffer
+identity preserved across iterations, so a linear search in a scan traps
+exactly like the paper's ``contains()`` case.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -36,8 +35,13 @@ except ImportError:  # pragma: no cover
     from jax.core import Literal
 
 from repro.configs.base import ProfilerConfig
-from repro.core.context import PairTable, context_of_eqn
-from repro.core.reservoir import ReservoirWatchpoints, Watchpoint
+from repro.core.context import context_of_eqn
+from repro.core.events import (LOAD, STORE, EventEngine, EventTrace,
+                               MemEvent)
+from repro.core.findings import WasteProfile
+
+# the unified profile IS the Tier-1 report (seed `Report` name kept)
+Report = WasteProfile
 
 
 # ----------------------------------------------------------------------
@@ -67,50 +71,6 @@ class Buffer:
     itemsize: int
 
 
-@dataclass
-class Report:
-    dead_stores: PairTable = field(default_factory=PairTable)
-    silent_stores: PairTable = field(default_factory=PairTable)
-    silent_loads: PairTable = field(default_factory=PairTable)
-    not_wasteful: Dict[str, int] = field(default_factory=dict)
-    total_store_events: int = 0
-    total_load_events: int = 0
-    total_store_bytes: float = 0.0
-    total_load_bytes: float = 0.0
-    sampling_period: int = 1
-    watchpoint_stats: Dict[str, Any] = field(default_factory=dict)
-
-    def _frac(self, table: PairTable, kind: str) -> float:
-        hits = table.total_count
-        misses = self.not_wasteful.get(kind, 0)
-        checked = hits + misses
-        if not checked:
-            return 0.0
-        # fraction of *checked* accesses that were wasteful — the sampled
-        # estimator of Eq. (1)'s byte fractions (uniform reservoir makes
-        # checked accesses an unbiased sample of all accesses)
-        return hits / checked
-
-    def fractions(self) -> Dict[str, float]:
-        return {
-            "dead_store": self._frac(self.dead_stores, "dead_store"),
-            "silent_store": self._frac(self.silent_stores, "silent_store"),
-            "silent_load": self._frac(self.silent_loads, "silent_load"),
-        }
-
-    def merge(self, other: "Report") -> "Report":
-        self.dead_stores.merge(other.dead_stores)
-        self.silent_stores.merge(other.silent_stores)
-        self.silent_loads.merge(other.silent_loads)
-        for k, v in other.not_wasteful.items():
-            self.not_wasteful[k] = self.not_wasteful.get(k, 0) + v
-        self.total_store_events += other.total_store_events
-        self.total_load_events += other.total_load_events
-        self.total_store_bytes += other.total_store_bytes
-        self.total_load_bytes += other.total_load_bytes
-        return self
-
-
 _CONTROL_PRIMS = {"scan", "while", "cond"}
 
 
@@ -122,40 +82,54 @@ def _inner_closed_jaxpr(eqn):
 
 
 class JxInterpreter:
-    """Profile fn(*args) and produce a :class:`Report`."""
+    """Profile fn(*args) and produce a :class:`WasteProfile`."""
 
     def __init__(self, cfg: Optional[ProfilerConfig] = None):
         self.cfg = cfg or ProfilerConfig(enabled=True)
-        self.period = max(1, self.cfg.period)
-        self.tol = self.cfg.fp_tolerance
-        self.detect = set(self.cfg.detect)
-        self.rng = np.random.RandomState(self.cfg.seed)
-        self.report = Report(sampling_period=self.period)
-
-    def _reset_epoch(self):
-        self.alloc = Allocator()
-        self.wp = {
-            "store": ReservoirWatchpoints(self.cfg.num_watchpoints, self.cfg.seed),
-            "load": ReservoirWatchpoints(self.cfg.num_watchpoints, self.cfg.seed + 1),
-        }
-        self.next_sample = self._draw_gap()
-
-    def _draw_gap(self) -> int:
-        return max(1, int(self.rng.geometric(1.0 / self.period)))
+        self.engine = EventEngine(self.cfg, tier=1)
+        self.trace: Optional[EventTrace] = None
 
     # ------------------------------------------------------------------
-    def profile(self, fn, *args, epochs: int = 1) -> Report:
+    def profile(self, fn, *args, epochs: int = 1,
+                replay: bool = True) -> WasteProfile:
+        """Profile `epochs` identical executions of fn(*args).
+
+        replay=True (default): interpret once recording an EventTrace,
+        then replay it for the remaining epochs. replay=False keeps the
+        seed behaviour — full re-interpretation every epoch — and exists
+        as the benchmark baseline; both give identical profiles at a
+        fixed seed because the replayed stream IS the recorded stream.
+
+        Memory trade: the recorded trace holds every intermediate value
+        by reference until profiling ends, so peak host memory is the
+        program's *total* intermediate footprint rather than its live
+        set. Tier-1 is the offline analysis mode and its subjects are
+        deliberately small (DESIGN.md §2); for a memory-constrained
+        multi-epoch profile pass replay=False to trade time back.
+        """
         closed = jax.make_jaxpr(fn)(*args)
         flat, _ = jax.tree_util.tree_flatten(args)
         flat = [np.asarray(x) for x in flat]
-        for _ in range(epochs):
-            self._reset_epoch()                    # GC-epoch semantics
-            self._eval_jaxpr(closed.jaxpr, closed.consts, flat, None)
-        self.report.watchpoint_stats = {
-            k: dict(v.stats) for k, v in self.wp.items()}
-        return self.report
+        record = replay and epochs > 1
+        for epoch in range(epochs):
+            self.alloc = Allocator()
+            self.engine.reset_epoch()          # GC-epoch semantics
+            if epoch == 0 or not replay:
+                self.trace = EventTrace() if record else None
+                self._eval_jaxpr(closed.jaxpr, closed.consts, flat, None)
+                record = False                 # only the first epoch records
+            else:
+                self.engine.replay(self.trace)
+        return self.engine.finalize()
 
     # ------------------------------------------------------------------
+    def _emit(self, kind: str, buf: Buffer, val: np.ndarray, ctx) -> None:
+        ev = MemEvent(kind=kind, address=buf.addr, nelems=buf.nelems,
+                      itemsize=buf.itemsize, values=val, ctx=ctx)
+        if self.trace is not None:
+            self.trace.append(ev)
+        self.engine.on_event(ev)
+
     def _new_buffer(self, val: np.ndarray) -> Buffer:
         return Buffer(self.alloc.alloc(int(val.size)), int(val.size),
                       int(val.dtype.itemsize))
@@ -206,7 +180,7 @@ class JxInterpreter:
             if not is_call:
                 for v, b in zip(eqn.invars, inbufs):
                     if b is not None:
-                        self._load_event(b, read_val(v), ctx)
+                        self._emit(LOAD, b, read_val(v), ctx)
 
             outvals = self._run_eqn(eqn, invals, inbufs)
             if not isinstance(outvals, (list, tuple)):
@@ -218,7 +192,7 @@ class JxInterpreter:
                 bufs[ov] = b
                 owned.append(b)
                 if not is_call:
-                    self._store_event(b, val, ctx)
+                    self._emit(STORE, b, val, ctx)
 
             # recycle frame-local dead buffers
             for v in list(bufs):
@@ -306,93 +280,9 @@ class JxInterpreter:
         br = branches[idx]
         return self._eval_jaxpr(br.jaxpr, br.consts, invals[1:], inbufs[1:])
 
-    # ------------------------------------------------------------------
-    # Memory events
-    # ------------------------------------------------------------------
-    def _advance(self, n: int) -> List[int]:
-        hits = []
-        pos = 0
-        remaining = n
-        while self.next_sample <= remaining:
-            pos += self.next_sample
-            hits.append(pos - 1)
-            remaining -= self.next_sample
-            self.next_sample = self._draw_gap()
-        self.next_sample -= remaining
-        return hits
-
-    @staticmethod
-    def _value_at(val: np.ndarray, offset: int):
-        flat = val.reshape(-1)
-        return flat[min(offset, flat.size - 1)]
-
-    def _equal(self, a, b) -> bool:
-        a = np.asarray(a)
-        b = np.asarray(b)
-        if a.dtype.kind in "fc":
-            fa, fb = float(np.real(a)), float(np.real(b))
-            if math.isnan(fa) or math.isnan(fb):
-                return False
-            return abs(fa - fb) <= self.tol * abs(fa)
-        return bool(a == b)
-
-    def _store_event(self, buf: Buffer, val: np.ndarray, ctx):
-        self.report.total_store_events += buf.nelems
-        self.report.total_store_bytes += buf.nelems * buf.itemsize
-        self._check_traps("store", buf, val, ctx)
-        for off in self._advance(buf.nelems):
-            if "dead_store" in self.detect:
-                self.wp["store"].on_sample(Watchpoint(
-                    address=buf.addr, offset=off, size=buf.itemsize,
-                    value=None, context=ctx, trap_type="RW_TRAP",
-                    meta="dead_store"))
-            if "silent_store" in self.detect:
-                self.wp["store"].on_sample(Watchpoint(
-                    address=buf.addr, offset=off, size=buf.itemsize,
-                    value=self._value_at(val, off), context=ctx,
-                    trap_type="W_TRAP", meta="silent_store"))
-
-    def _load_event(self, buf: Buffer, val: np.ndarray, ctx):
-        self.report.total_load_events += buf.nelems
-        self.report.total_load_bytes += buf.nelems * buf.itemsize
-        self._check_traps("load", buf, val, ctx)
-        if "silent_load" in self.detect:
-            for off in self._advance(buf.nelems):
-                self.wp["load"].on_sample(Watchpoint(
-                    address=buf.addr, offset=off, size=buf.itemsize,
-                    value=self._value_at(val, off), context=ctx,
-                    trap_type="RW_TRAP", meta="silent_load"))
-
-    def _check_traps(self, access: str, buf: Buffer, val: np.ndarray, ctx):
-        rep = self.report
-        for wp in self.wp["store"].matching(
-                lambda w: w.address == buf.addr and w.offset < buf.nelems):
-            if wp.meta == "dead_store":
-                if access == "store":
-                    rep.dead_stores.add(wp.context, ctx, wp.size)
-                else:
-                    rep.not_wasteful["dead_store"] = \
-                        rep.not_wasteful.get("dead_store", 0) + 1
-                self.wp["store"].disarm(wp)
-            elif wp.meta == "silent_store" and access == "store":
-                if self._equal(wp.value, self._value_at(val, wp.offset)):
-                    rep.silent_stores.add(wp.context, ctx, wp.size)
-                else:
-                    rep.not_wasteful["silent_store"] = \
-                        rep.not_wasteful.get("silent_store", 0) + 1
-                self.wp["store"].disarm(wp)
-        for wp in self.wp["load"].matching(
-                lambda w: w.address == buf.addr and w.offset < buf.nelems):
-            if access == "load":
-                if self._equal(wp.value, self._value_at(val, wp.offset)):
-                    rep.silent_loads.add(wp.context, ctx, wp.size)
-                else:
-                    rep.not_wasteful["silent_load"] = \
-                        rep.not_wasteful.get("silent_load", 0) + 1
-            self.wp["load"].disarm(wp)
-
 
 def profile_fn(fn, *args, cfg: Optional[ProfilerConfig] = None,
-               epochs: int = 1) -> Report:
-    """Profile fn(*args) with JXPerf-JAX Tier-1."""
-    return JxInterpreter(cfg).profile(fn, *args, epochs=epochs)
+               epochs: int = 1, replay: bool = True) -> WasteProfile:
+    """Profile fn(*args) with JXPerf-JAX Tier-1 (trace→replay epochs)."""
+    return JxInterpreter(cfg).profile(fn, *args, epochs=epochs,
+                                      replay=replay)

@@ -1,17 +1,21 @@
-"""Post-mortem profile rendering and cross-shard merging (paper §5.6).
+"""Post-mortem profile rendering and merging (paper §5.6, DESIGN.md §2).
 
-Per-device/per-process Tier-1 reports merge with the paper's rule: pairs
-coalesce iff both calling contexts match; metrics aggregate.
+Every tier emits the same findings.WasteProfile, so merging is uniform:
+per-device / per-process / per-tier profiles coalesce with the paper's
+rule — ⟨C1,C2⟩ pairs merge iff both calling contexts (and kind/tier)
+match; estimator counters and totals aggregate. Profiles round-trip
+through JSON, so shards can be written per host and merged post-mortem.
 """
 from __future__ import annotations
 
-from typing import Iterable, List
+import os
+from typing import Iterable
 
-from repro.core.context import fmt_context
-from repro.core.interpreter import Report
+from repro.core.findings import WasteProfile, merge_profiles
 
 
-def merge_reports(reports: Iterable[Report]) -> Report:
+def merge_reports(reports: Iterable[WasteProfile]) -> WasteProfile:
+    """Mutating left-fold merge (seed API): first profile absorbs the rest."""
     it = iter(reports)
     first = next(it)
     for r in it:
@@ -19,19 +23,28 @@ def merge_reports(reports: Iterable[Report]) -> Report:
     return first
 
 
-def render(report: Report, top_k: int = 5) -> str:
-    fr = report.fractions()
-    lines: List[str] = []
-    lines.append("== JXPerf-JAX Tier-1 profile ==")
-    lines.append(f"  sampling period: {report.sampling_period} events")
-    lines.append(f"  events: {report.total_store_events:,} stores / "
-                 f"{report.total_load_events:,} loads")
-    for kind, table in (("dead_store", report.dead_stores),
-                        ("silent_store", report.silent_stores),
-                        ("silent_load", report.silent_loads)):
-        lines.append(f"  F^{kind} = {fr[kind]:.1%} "
-                     f"({table.total_count} sampled pairs)")
-        for (c1, c2), st in table.top(top_k):
-            lines.append(f"    x{st.count:<5d} {fmt_context(c1[-3:])}")
-            lines.append(f"           -> {fmt_context(c2[-3:])}")
-    return "\n".join(lines)
+def merge_shards(reports: Iterable[WasteProfile]) -> WasteProfile:
+    """Pure cross-shard merge: inputs untouched, fresh merged profile."""
+    return merge_profiles(reports)
+
+
+def render(report: WasteProfile, top_k: int = 5) -> str:
+    return report.render(top_k=top_k)
+
+
+def dump_json(report: WasteProfile, path: str) -> str:
+    """Write the profile to `path` (lossless JSON round-trip). Parent
+    directories are created — a long profiled run must not lose its
+    profile to a missing output directory at the very end."""
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    text = report.to_json(indent=2)
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def load_json(path: str) -> WasteProfile:
+    with open(path) as f:
+        return WasteProfile.from_json(f.read())

@@ -50,16 +50,14 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
 # the paper's FP tolerance semantics; tol=0 => exact).
 # ----------------------------------------------------------------------
 def silent_compare_ref(a: jax.Array, b: jax.Array, tol: float = 0.01) -> jax.Array:
-    """Count elements where b is a 'silent' overwrite of a. Returns int32 count."""
+    """Count elements where b is a 'silent' overwrite of a. Returns int32 count.
+
+    Uses the substrate's single silent-match definition (symmetric relative
+    tolerance; NaN padding is never silent)."""
+    from repro.core.events import silent_mask
     a = a.astype(jnp.float32).ravel()
     b = b.astype(jnp.float32).ravel()
-    if tol == 0.0:
-        eq = a == b
-    else:
-        eq = jnp.abs(a - b) <= tol * jnp.abs(a)
-    # NaNs are never silent (used as padding sentinel by the kernel wrapper)
-    eq = eq & ~jnp.isnan(a) & ~jnp.isnan(b)
-    return jnp.sum(eq, dtype=jnp.int32)
+    return jnp.sum(silent_mask(a, b, tol), dtype=jnp.int32)
 
 
 # ----------------------------------------------------------------------

@@ -26,19 +26,18 @@ BLOCK_ROWS = 256          # (256, 128) f32 tile = 128 KiB/operand in VMEM
 
 
 def _silent_kernel(a_ref, b_ref, o_ref, *, tol: float):
+    from repro.core.events import silent_mask
     a = a_ref[...].astype(jnp.float32)
     b = b_ref[...].astype(jnp.float32)
-    if tol == 0.0:
-        eq = a == b
-    else:
-        eq = jnp.abs(a - b) <= tol * jnp.abs(a)
-    eq = eq & ~jnp.isnan(a) & ~jnp.isnan(b)     # NaN padding is never silent
+    # the substrate's single silent-match definition (symmetric rel tol,
+    # NaN padding never silent) — pure VPU elementwise ops
+    eq = silent_mask(a, b, tol)
     o_ref[0, 0] = jnp.sum(eq.astype(jnp.int32))
 
 
 def silent_compare(a: jax.Array, b: jax.Array, tol: float = 0.01, *,
                    interpret: bool = False) -> jax.Array:
-    """Count silent elements (|a-b| <= tol*|a|). Returns scalar int32."""
+    """Count silent elements (|a-b| <= tol*max(|a|,|b|)). Returns int32."""
     assert a.shape == b.shape, (a.shape, b.shape)
     af = a.reshape(-1)
     bf = b.reshape(-1)

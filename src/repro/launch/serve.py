@@ -13,13 +13,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
+from repro.configs.base import ProfilerConfig
+from repro.core.findings import merge_profiles
+from repro.core.hlo_waste import analyze_waste
+from repro.core.interpreter import profile_fn
+from repro.core.report import dump_json
 from repro.data.synthetic import batch_at
 from repro.models.zoo import build_model
 from repro.serve.decode import make_serve_step
 
 
 def run(arch: str, *, smoke: bool = True, batch: int = 4,
-        prompt_len: int = 32, gen: int = 16, seed: int = 0):
+        prompt_len: int = 32, gen: int = 16, seed: int = 0,
+        profile: bool = False, profile_out: str = None):
     cfg = registry.get_config(arch)
     if smoke:
         cfg = cfg.smoke()
@@ -54,7 +60,26 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
     print(f"[serve] {arch}: {batch} seqs, prompt {prompt_len} + gen {gen} "
           f"in {dt:.2f}s ({tps:.0f} tok/s)")
     print("[serve] sample continuation:", np.asarray(out[0])[:12])
-    return out
+
+    if profile:
+        # one merged WasteProfile for the serving path (DESIGN.md §2):
+        # Tier-2 on the compiled decode step, Tier-1 (trace→replay) on a
+        # single-token decode microstep
+        lowered = serve_step.lower(params, cache, generated[-1])
+        tier2 = analyze_waste(lowered.compile().as_text()).profile
+        pc = ProfilerConfig(enabled=True, period=5000, seed=seed)
+        tier1 = profile_fn(
+            lambda tok: make_serve_step(model)(params, cache, tok)[0],
+            generated[-1], cfg=pc, epochs=2)
+        merged = merge_profiles([tier1, tier2])
+        print(merged.render(top_k=3))
+        if profile_out:
+            dump_json(merged, profile_out)
+            print(f"[serve] waste profile written to {profile_out}")
+    else:
+        merged = None
+    # same contract as launch.train.run: (result, merged profile or None)
+    return out, merged
 
 
 def main():
@@ -64,9 +89,11 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--profile", action="store_true")
+    ap.add_argument("--profile-out", default=None)
     a = ap.parse_args()
     run(a.arch, smoke=a.smoke, batch=a.batch, prompt_len=a.prompt_len,
-        gen=a.gen)
+        gen=a.gen, profile=a.profile, profile_out=a.profile_out)
 
 
 if __name__ == "__main__":

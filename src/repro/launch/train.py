@@ -21,7 +21,9 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import registry
 from repro.configs.base import ProfilerConfig, TrainConfig
 from repro.core.detectors import TrainingDetectors
+from repro.core.findings import merge_profiles
 from repro.core.hlo_waste import analyze_waste
+from repro.core.report import dump_json
 from repro.data.pipeline import Prefetcher
 from repro.data.synthetic import stream
 from repro.launch.mesh import make_host_mesh
@@ -37,7 +39,8 @@ def run(arch: str, *, smoke: bool = True, steps: int = 50, batch: int = 8,
         ckpt_every: int = 25, profile: bool = False,
         waste_report: bool = False, resume: bool = False,
         microbatches: int = 1, remat: str = "none", seed: int = 0,
-        log_every: int = 10, strategy: str = None, total_steps: int = None):
+        log_every: int = 10, strategy: str = None, total_steps: int = None,
+        profile_out: str = None):
     cfg = registry.get_config(arch)
     if smoke:
         cfg = cfg.smoke()
@@ -74,11 +77,13 @@ def run(arch: str, *, smoke: bool = True, steps: int = 50, batch: int = 8,
 
     data = Prefetcher(stream(cfg, batch, seq, seed=seed, start_step=start_step))
 
+    tier2_profile = None
     if waste_report:
         b0 = next(iter(data))
         lowered = jit_step.lower(state, {k: jnp.asarray(v) for k, v in b0.items()})
         rep = analyze_waste(lowered.compile().as_text())
         print(rep.summary())
+        tier2_profile = rep.profile
 
     losses = []
     t_start = time.time()
@@ -111,11 +116,17 @@ def run(arch: str, *, smoke: bool = True, steps: int = 50, batch: int = 8,
     dt = time.time() - t_start
     print(f"[train] done: {steps - start_step} steps in {dt:.1f}s; "
           f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
-    if detectors:
-        print("[train] Tier-3 fractions:", detectors.report.fractions())
-        for f in detectors.report.top(5):
-            print(f"    step {f.step} {f.kind} {f.path} ({f.fraction:.0%})")
-    return losses, (detectors.report if detectors else None)
+    # one merged WasteProfile across tiers (DESIGN.md §2): Tier-3 step
+    # findings + Tier-2 compiled-step findings coalesce into one report
+    parts = [p for p in (detectors.report if detectors else None,
+                         tier2_profile) if p is not None]
+    profile_merged = merge_profiles(parts) if parts else None
+    if profile_merged is not None:
+        print(profile_merged.render(top_k=5))
+        if profile_out:
+            dump_json(profile_merged, profile_out)
+            print(f"[train] waste profile written to {profile_out}")
+    return losses, profile_merged
 
 
 def main():
@@ -134,11 +145,14 @@ def main():
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--remat", default="none")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--profile-out", default=None,
+                    help="write the merged waste profile as JSON")
     a = ap.parse_args()
     run(a.arch, smoke=a.smoke, steps=a.steps, batch=a.batch, seq=a.seq,
         lr=a.lr, ckpt_dir=a.ckpt_dir, ckpt_every=a.ckpt_every,
         profile=a.profile, waste_report=a.waste_report, resume=a.resume,
-        microbatches=a.microbatches, remat=a.remat, seed=a.seed)
+        microbatches=a.microbatches, remat=a.remat, seed=a.seed,
+        profile_out=a.profile_out)
 
 
 if __name__ == "__main__":

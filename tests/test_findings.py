@@ -1,0 +1,168 @@
+"""Unified waste-profile substrate: JSON round-trip, cross-tier and
+cross-shard merge associativity, trace→replay equivalence with the
+epoch-by-epoch interpreter, and the shared comparison helper."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ProfilerConfig
+from repro.core.detectors import TrainingDetectors
+from repro.core.events import approx_equal, silent_mask
+from repro.core.findings import Finding, WasteProfile, merge
+from repro.core.hlo_waste import analyze_waste
+from repro.core.interpreter import profile_fn
+from repro.core.report import dump_json, load_json, merge_reports
+
+CFG = ProfilerConfig(enabled=True, period=20, num_watchpoints=4)
+
+
+def _linear_search(keys, arr):
+    def body(c, k):
+        return c + jnp.any(arr == k).astype(jnp.int32), None
+    out, _ = jax.lax.scan(body, jnp.int32(0), keys)
+    return out
+
+
+def _tier1(seed=0):
+    cfg = ProfilerConfig(enabled=True, period=20, num_watchpoints=4,
+                         seed=seed)
+    return profile_fn(_linear_search, jnp.arange(48) % 7, jnp.arange(256),
+                      cfg=cfg)
+
+
+def _tier3():
+    det = TrainingDetectors(ProfilerConfig(enabled=True), leaves_per_step=8)
+    p0 = {"live": jnp.ones((64,)), "frozen": jnp.zeros((32,))}
+    g = {"live": jnp.ones((64,)), "frozen": jnp.zeros((32,))}
+    for step in range(6):
+        p1 = {"live": p0["live"] * (1.0 + 0.1 * (step + 1)),
+              "frozen": p0["frozen"]}
+        det.on_step(step, p0, p1, g)
+    return det.report
+
+
+_HLO = """
+HloModule m
+
+ENTRY %main (p0: f32[4096]) -> f32[4096] {
+  %p0 = f32[4096]{0} parameter(0)
+  %ag1 = f32[4096]{0} all-gather(%p0), replica_groups=[2,8]<=[16], dimensions={0}
+  %ag2 = f32[4096]{0} all-gather(%p0), replica_groups=[2,8]<=[16], dimensions={0}
+  ROOT %s = f32[4096]{0} add(%ag1, %ag2)
+}
+"""
+
+
+# ----------------------------------------------------------------------
+# JSON round-trip
+# ----------------------------------------------------------------------
+def test_profile_json_roundtrip_tier1():
+    rep = _tier1()
+    again = WasteProfile.from_json(rep.to_json())
+    assert again == rep
+    assert again.fractions() == rep.fractions()
+    assert again.silent_loads.total_count == rep.silent_loads.total_count
+    assert again.total_load_events == rep.total_load_events
+
+
+def test_profile_json_roundtrip_merged_tiers(tmp_path):
+    """merge(tier1, tier2, tier3) round-trips losslessly through a file."""
+    unified = merge(_tier1(), analyze_waste(_HLO).profile, _tier3())
+    assert unified.tiers == [1, 2, 3]
+    path = str(tmp_path / "profile.json")
+    dump_json(unified, path)
+    assert load_json(path) == unified
+
+
+# ----------------------------------------------------------------------
+# Merge semantics (§5.6 across shards, epochs and tiers)
+# ----------------------------------------------------------------------
+def test_cross_shard_merge_associative():
+    a, b, c = _tier1(seed=0), _tier1(seed=1), _tier1(seed=2)
+    left = merge(merge(a, b), c)
+    right = merge(a, merge(b, c))
+    assert left == right
+    # pure merge: shard inputs untouched
+    assert a.tiers == [1] and a == _tier1(seed=0)
+
+
+def test_cross_tier_merge_associative_and_complete():
+    t1, t2, t3 = _tier1(), analyze_waste(_HLO).profile, _tier3()
+    left = merge(merge(t1, t2), t3)
+    right = merge(t1, merge(t2, t3))
+    assert left == right
+    fr = left.fractions()
+    assert fr["silent_load"] > 0.5                 # tier-1 estimator
+    assert fr["redundant_collective"] == 1.0       # tier-2 estimator
+    assert "silent_param_store" in fr              # tier-3 estimator
+    kinds = {f.kind for f in left.findings}
+    assert {"silent_load", "redundant_collective", "dead_grad_store"} <= kinds
+
+
+def test_shard_merge_coalesces_matching_pairs():
+    a, b = _tier1(seed=0), _tier1(seed=0)
+    m = merge(a, b)
+    # identical shards -> same ⟨C1,C2⟩ keys, doubled counts
+    assert m.silent_loads.total_count == 2 * a.silent_loads.total_count
+    assert m.total_load_events == 2 * a.total_load_events
+    assert m.fractions()["silent_load"] == a.fractions()["silent_load"]
+    assert merge_reports([_tier1(seed=0), b]) == m
+
+
+def test_finding_coalesce_rule():
+    p = WasteProfile(tier=1)
+    p.add(Finding(kind="dead_store", tier=1, c1=("f:1",), c2=("g:2",),
+                  bytes=4.0))
+    p.add(Finding(kind="dead_store", tier=1, c1=("f:1",), c2=("g:2",),
+                  bytes=4.0))
+    p.add(Finding(kind="dead_store", tier=1, c1=("f:1",), c2=("h:3",),
+                  bytes=8.0))
+    assert len(p.findings) == 2                    # §5.6: both ctxs match
+    assert p.pair_table("dead_store").pairs[(("f:1",), ("g:2",))].count == 2
+
+
+# ----------------------------------------------------------------------
+# Trace→replay (tentpole): identical profiles to re-interpretation
+# ----------------------------------------------------------------------
+def test_trace_replay_identical_to_reinterpretation():
+    args = (jnp.arange(48) % 7, jnp.arange(256))
+    for epochs in (2, 4):
+        cfg = ProfilerConfig(enabled=True, period=20, num_watchpoints=4)
+        re_rep = profile_fn(_linear_search, *args, cfg=cfg, epochs=epochs,
+                            replay=False)
+        cfg = ProfilerConfig(enabled=True, period=20, num_watchpoints=4)
+        rp_rep = profile_fn(_linear_search, *args, cfg=cfg, epochs=epochs,
+                            replay=True)
+        assert rp_rep == re_rep
+        assert rp_rep.fractions() == re_rep.fractions()
+
+
+def test_multi_epoch_accumulates():
+    one = _tier1()
+    cfg = ProfilerConfig(enabled=True, period=20, num_watchpoints=4)
+    four = profile_fn(_linear_search, jnp.arange(48) % 7, jnp.arange(256),
+                      cfg=cfg, epochs=4)
+    assert four.total_load_events == 4 * one.total_load_events
+    assert sum(four.checked.values()) > sum(one.checked.values())
+
+
+# ----------------------------------------------------------------------
+# The one comparison helper (symmetric relative tolerance)
+# ----------------------------------------------------------------------
+def test_approx_equal_symmetric_near_zero():
+    # seed bug: |a-b| <= tol*|a| made a=0 never-silent vs any tiny b and
+    # direction-dependent; the shared helper is symmetric
+    assert approx_equal(np.float32(0.0), np.float32(0.0), 0.01)
+    assert not approx_equal(np.float32(0.0), np.float32(1.0), 0.01)
+    a, b = np.float32(1.0), np.float32(1.005)
+    assert approx_equal(a, b, 0.01) == approx_equal(b, a, 0.01)
+    assert not approx_equal(np.float32(np.nan), np.float32(np.nan), 0.01)
+    assert approx_equal(np.int32(3), np.int32(3), 0.0)
+
+
+def test_silent_mask_matches_scalar_helper():
+    a = np.asarray([0.0, 1.0, 1.005, -2.0, np.nan], np.float32)
+    b = np.asarray([0.0, 1.005, 1.0, -2.1, np.nan], np.float32)
+    mask = np.asarray(silent_mask(a, b, 0.01))
+    want = [approx_equal(x, y, 0.01) for x, y in zip(a, b)]
+    assert mask.tolist() == want

@@ -9,7 +9,7 @@ import os
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.configs import registry
 from repro.models.zoo import build_model

@@ -39,7 +39,9 @@ def test_train_profile_mode(tmp_path):
 
 
 def test_serve_e2e():
-    out = serve_run("qwen3-1.7b", smoke=True, batch=2, prompt_len=8, gen=4)
+    out, profile = serve_run("qwen3-1.7b", smoke=True, batch=2,
+                             prompt_len=8, gen=4)
+    assert profile is None                     # no --profile requested
     assert out.shape == (2, 4)
     cfg = registry.get_config("qwen3-1.7b").smoke()
     assert int(jnp.max(out)) < cfg.vocab_size   # pad vocab never sampled

@@ -1,11 +1,14 @@
 """Tab. 1 / Fig. 6 analogue: detection overhead vs native execution.
 
-Two numbers, honestly separated (DESIGN.md §2):
+Numbers, honestly separated (DESIGN.md §2):
   * Tier-3 (production mode): % step-time overhead of the detectors on a
     real jitted train step — the analogue of the paper's 7% claim;
   * Tier-1 (analysis mode): interpreter slowdown vs the jitted step at
     several sampling periods — expensive by construction (software
-    watchpoints), reported for completeness.
+    watchpoints), reported for completeness;
+  * Serving: batched prefill vs the seed's token-by-token cache fill,
+    and the serve-side Tier-3 detectors' overhead on the engine's
+    decode loop.
 """
 from __future__ import annotations
 
@@ -13,12 +16,15 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import registry
 from repro.configs.base import ProfilerConfig, TrainConfig
-from repro.core.detectors import TrainingDetectors
+from repro.core.detectors import ServingDetectors, TrainingDetectors
 from repro.core.interpreter import profile_fn
 from repro.models.zoo import build_model
+from repro.serve.decode import make_serve_step
+from repro.serve.engine import Request, ServeEngine
 from repro.train import state as TS
 from repro.train.step import make_train_step
 
@@ -100,4 +106,64 @@ def run():
     rows.append(("overhead.tier1_reinterp_e8", t_re * 1e6, "baseline"))
     rows.append(("overhead.tier1_replay_e8", t_rp * 1e6,
                  f"speedup={t_re/t_rp:.1f}x|identical={identical}"))
+    rows.extend(run_serve())
+    return rows
+
+
+def run_serve():
+    """Serving-tier entries: prefill speedup + detector decode overhead."""
+    rows = []
+    cfg = registry.get_config("qwen3-1.7b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, P = 4, 32
+    max_len = 256                   # engine cache: slots stay live a while
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (B, P), 0,
+                                 cfg.vocab_size)
+    # prefill comparison cache sized to the workload (prompt + headroom)
+    cache0 = model.init_cache(params, B, 64, kv_dtype=jnp.float32)
+
+    # batched prefill (one forward fills the cache) vs the seed's
+    # token-by-token teacher-forced loop through the decode step
+    serve_step = jax.jit(make_serve_step(model))
+    prefill = jax.jit(model.prefill)
+
+    def tokenloop():
+        c = cache0
+        for t in range(P):
+            nxt, c = serve_step(params, c, prompts[:, t:t + 1])
+        jax.block_until_ready(nxt)
+
+    def batched():
+        lg, c = prefill(params, cache0, prompts)
+        jax.block_until_ready(lg)
+    t_loop = _time(tokenloop, n=3)
+    t_batch = _time(batched, n=3)
+    rows.append(("overhead.serve_prefill_tokenloop", t_loop * 1e6,
+                 "baseline"))
+    rows.append(("overhead.serve_prefill_batched", t_batch * 1e6,
+                 f"speedup={t_loop/t_batch:.1f}x"))
+
+    # serve-side Tier-3 detector overhead on the continuous decode loop
+    def mk_engine(det):
+        eng = ServeEngine(model, params, num_slots=B, max_len=max_len,
+                          detectors=det)
+        rng = np.random.RandomState(0)
+        for b in range(B):
+            eng.submit(Request(
+                rid=f"r{b}",
+                tokens=rng.randint(0, cfg.vocab_size, size=P).astype(np.int32),
+                max_new_tokens=max_len))       # slots stay live throughout
+        eng._admit()
+        for _ in range(4):                      # warm jits + reservoir
+            eng._decode_tick()
+        return eng
+
+    eng0 = mk_engine(None)
+    t_plain = _time(eng0._decode_tick, n=10)
+    eng3 = mk_engine(ServingDetectors(ProfilerConfig(enabled=True)))
+    t_det = _time(eng3._decode_tick, n=10)
+    rows.append(("overhead.serve_decode_step", t_plain * 1e6, "baseline"))
+    rows.append(("overhead.serve_tier3_step", t_det * 1e6,
+                 f"slowdown={t_det/t_plain:.3f}x"))
     return rows

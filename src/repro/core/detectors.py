@@ -1,8 +1,10 @@
-"""Tier-3: training-loop waste detectors (DESIGN.md §2) — the production
-always-on mode. Watches the *framework's own* memory traffic at step
-granularity through the same substrate as Tier-1 (repro.core.events):
-parameter/gradient/batch accesses become MemEvents, sampled accesses arm
-reservoir watchpoints, and findings land in the unified WasteProfile:
+"""Tier-3: production always-on waste detectors (DESIGN.md §2). Watches
+the *framework's own* memory traffic at step granularity through the same
+substrate as Tier-1 (repro.core.events): parameter/gradient/batch/KV-cache
+accesses become MemEvents, sampled accesses arm reservoir watchpoints, and
+findings land in the unified WasteProfile.
+
+Training loop (``TrainingDetectors``):
 
   silent parameter stores — a parameter leaf whose post-optimizer value
       equals its pre-step value within tolerance (frozen/dead subnetwork,
@@ -12,21 +14,36 @@ reservoir watchpoints, and findings land in the unified WasteProfile:
   silent data loads       — repeated identical batches from the pipeline
       (MemEvent content digest), Def. 3 at the input boundary.
 
+Serving loop (``ServingDetectors``, DESIGN.md §2 serving tier): the KV
+cache is the serving heap, and the engine's fixed-size decode batch keeps
+writing it whether or not a slot serves a live request:
+
+  dead KV stores     — K/V rows written for slots past a request's end
+      (idle/finished slots still written every step, or a finished
+      request's rows overwritten at recycle without a live read): Def. 1
+      at request granularity;
+  silent KV stores   — inactive slots rewriting the same K/V site with
+      identical values (frozen token + frozen write index), checked via
+      silent_compare (Def. 2);
+  silent prefix loads — duplicate prompt prefixes by content digest:
+      the prefill re-reads (and recomputes K/V for) a prefix another
+      request already paid for — a prefix-cache opportunity (Def. 3).
+
 The value comparison runs on-device via the silent_compare Pallas kernel
 (2 reads/element — roofline-minimal) using the substrate's single
 approximate-equality definition, so the per-step overhead is bounded by
-the sampled leaf set, mirroring the paper's 7%-overhead philosophy.
+the sampled leaf/site set, mirroring the paper's 7%-overhead philosophy.
 """
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Any, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
 from repro.configs.base import ProfilerConfig
-from repro.core.events import STORE, MemEvent
+from repro.core.events import LOAD, STORE, MemEvent
 from repro.core.findings import Finding, WasteProfile
 from repro.core.reservoir import ReservoirWatchpoints, Watchpoint
 from repro.kernels import ops
@@ -136,4 +153,194 @@ class TrainingDetectors:
             self._batch_hashes[key] = step
             while len(self._batch_hashes) > self._hash_window:
                 self._batch_hashes.popitem(last=False)
+        return out
+
+
+# ----------------------------------------------------------------------
+# Serving tier
+# ----------------------------------------------------------------------
+class SlotWrite:
+    """One decode-batch slot's K/V write in the current engine tick."""
+
+    __slots__ = ("slot", "rid", "active", "pos")
+
+    def __init__(self, slot: int, rid: Optional[str], active: bool,
+                 pos: int):
+        self.slot = slot
+        self.rid = rid
+        self.active = active
+        self.pos = pos
+
+
+class ServingDetectors:
+    """Serve-side Tier-3: KV-cache waste at request granularity.
+
+    Attach to a ``serve.engine.ServeEngine`` (it calls ``bind`` once and
+    then ``on_admit`` / ``on_finish`` / ``on_step`` as the schedule
+    advances). Watchpoints follow the paper's discipline on the serving
+    heap: a sampled K/V *site* (layer, slot, position) arms one reservoir
+    watchpoint for one client — dead (value-agnostic RW analogue) or
+    silent (holds the written value) — and traps on the next store to
+    that site: the idle-slot rewrite of the same position, a recycled
+    slot's prefill sweep, or a new occupant's decode reaching the
+    position. ⟨C1,C2⟩ is the arming request/layer and the trapping
+    request/step.
+    """
+
+    def __init__(self, cfg: Optional[ProfilerConfig] = None,
+                 sites_per_step: int = 2):
+        self.cfg = cfg or ProfilerConfig(enabled=True)
+        self.tol = self.cfg.fp_tolerance
+        self.sites_per_step = sites_per_step
+        self.wp = ReservoirWatchpoints(self.cfg.num_watchpoints,
+                                       self.cfg.seed)
+        self.rng = np.random.RandomState(self.cfg.seed)
+        self.report = WasteProfile(tier=3)
+        # bounded LRU of prompt-prefix digests -> (step, C1 of first load)
+        self._prefix_hashes: "OrderedDict[str, Tuple[int, Tuple[str, ...]]]" \
+            = OrderedDict()
+        self._hash_window = max(1, self.cfg.batch_hash_window)
+        self.num_layers = 1
+        self.site_bytes = 0
+
+    def bind(self, *, num_layers: int, site_bytes: int) -> None:
+        """Engine geometry: layer count and bytes per K/V site."""
+        self.num_layers = max(1, num_layers)
+        self.site_bytes = site_bytes
+
+    # -- silent prefix loads -------------------------------------------
+    @staticmethod
+    def _prefix_lengths(n: int) -> List[int]:
+        """Power-of-two prefixes (≥8) plus the full prompt, shortest
+        first, so shared prefixes of different-length prompts match."""
+        out = [p for p in (8, 16, 32, 64, 128, 256, 512, 1024) if p < n]
+        out.append(n)
+        return out
+
+    def on_admit(self, step: int, slot: int, rid: str,
+                 tokens: np.ndarray,
+                 padded_len: Optional[int] = None) -> List[Finding]:
+        """Admission: prefix-digest dedup + recycle traps for the slot.
+
+        padded_len: extent of the prefill's store sweep — the padded
+        prompt length, ≥ tokens.size (engines pad admission groups)."""
+        out: List[Finding] = []
+        tokens = np.asarray(tokens)
+        swept = max(int(padded_len or 0), tokens.size)
+        ctx2 = ("serve.engine:prefill", f"req:{rid}", f"slot:{slot}")
+
+        plens = self._prefix_lengths(tokens.size)
+        hit: Optional[Tuple[int, Tuple[str, ...]]] = None
+        keys = []
+        for plen in plens:
+            ev = MemEvent(kind=LOAD, address=slot, nelems=plen,
+                          itemsize=int(tokens.dtype.itemsize),
+                          values=tokens[:plen], ctx=ctx2)
+            key = f"prefix{plen}:{ev.digest()}"
+            keys.append(key)
+            if key in self._prefix_hashes:
+                hit = (plen, self._prefix_hashes[key][1])
+        self.report.observe("silent_prefix_load", hit is not None)
+        if hit is not None:
+            plen, c1 = hit       # longest duplicated prefix wins
+            f = self.report.add_pair(
+                "silent_prefix_load", 3, c1, ctx2,
+                plen * int(tokens.dtype.itemsize), prefix_len=plen)
+            out.append(f)
+        for key in keys:
+            if key in self._prefix_hashes:
+                self._prefix_hashes.move_to_end(key)
+            else:
+                self._prefix_hashes[key] = (step, ctx2)
+        while len(self._prefix_hashes) > self._hash_window:
+            self._prefix_hashes.popitem(last=False)
+
+        # recycle traps: the prefill store sweeps [0, padded_len) of this
+        # slot's rows — watched sites in that range are overwritten now
+        # (padded-tail positions included: their old value is destroyed
+        # by garbage K/V). The old value is gone, so silent-client
+        # watchpoints disarm without classification (the substrate's
+        # out-of-extent rule); dead-client ones classify: no live read
+        # since arming ⇒ dead.
+        for wp in list(self.wp.armed()):
+            m = wp.meta
+            if m["slot"] != slot or m["pos"] >= swept:
+                continue
+            if m["client"] == "dead_kv_store":
+                dead = not m["live"]
+                self.report.observe("dead_kv_store", dead)
+                if dead:
+                    f = self.report.add_pair("dead_kv_store", 3,
+                                             wp.context, ctx2, wp.size)
+                    out.append(f)
+            self.wp.disarm(wp)
+        return out
+
+    def on_finish(self, step: int, slot: int, rid: str) -> None:
+        """Request ended: its armed sites can no longer be live-read."""
+        for wp in self.wp.armed():
+            if wp.meta["slot"] == slot and wp.meta["rid"] == rid:
+                wp.meta["live"] = False
+
+    # -- per-tick watchpoints ------------------------------------------
+    def on_step(self, step: int, writes: Sequence[SlotWrite],
+                peek: Callable[[int, int, int], Any]) -> List[Finding]:
+        """One engine decode tick: every slot wrote one K/V row.
+
+        writes: per-slot view of this tick's stores (position written).
+        peek(layer, slot, pos) -> the K/V values now at that site.
+        """
+        out: List[Finding] = []
+        by_slot = {w.slot: w for w in writes}
+
+        for wp in list(self.wp.armed()):
+            m = wp.meta
+            w = by_slot.get(m["slot"])
+            if w is None or w.pos != m["pos"]:
+                continue                 # no store at the watched site
+            ctx2 = (f"serve.engine:step{step}", f"slot:{w.slot}",
+                    f"req:{w.rid or 'idle'}")
+            if m["client"] == "dead_kv_store":
+                # Def. 1 analogue: the armed store was overwritten with no
+                # live-request read in between
+                dead = not m["live"]
+                self.report.observe("dead_kv_store", dead)
+                if dead:
+                    out.append(self.report.add_pair(
+                        "dead_kv_store", 3, wp.context, ctx2, wp.size))
+            else:
+                # Def. 2 analogue: same site rewritten with the same value
+                cur = np.asarray(peek(m["layer"], w.slot, w.pos))
+                frac = float(ops.silent_fraction(wp.value, cur,
+                                                 tol=self.tol))
+                silent = frac > 0.99
+                self.report.observe("silent_kv_store", silent)
+                if silent:
+                    out.append(self.report.add_pair(
+                        "silent_kv_store", 3, wp.context, ctx2, wp.size))
+            self.wp.disarm(wp)
+
+        # arm: sample this tick's written sites; one client per sample
+        # (the substrate's one-sample-one-watchpoint discipline)
+        k = min(self.sites_per_step, len(writes))
+        if k > 0:
+            for i in self.rng.choice(len(writes), size=k, replace=False):
+                w = writes[int(i)]
+                layer = int(self.rng.randint(self.num_layers))
+                client = ("dead_kv_store" if self.rng.randint(2) == 0
+                          else "silent_kv_store")
+                value = None
+                if client == "silent_kv_store":
+                    value = np.asarray(peek(layer, w.slot, w.pos))
+                c1 = (f"serve.kv[{layer}]", f"slot:{w.slot}",
+                      f"req:{w.rid or 'idle'}")
+                self.wp.on_sample(Watchpoint(
+                    address=(layer << 32) | (w.slot << 16) | w.pos,
+                    offset=w.pos, size=self.site_bytes, value=value,
+                    context=c1,
+                    trap_type="RW_TRAP" if client == "dead_kv_store"
+                    else "W_TRAP",
+                    meta={"client": client, "layer": layer,
+                          "slot": w.slot, "pos": w.pos, "rid": w.rid,
+                          "live": w.active}))
         return out

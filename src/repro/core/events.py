@@ -81,8 +81,17 @@ class MemEvent:
         return self.nelems * self.itemsize
 
     def value_at(self, offset: int):
+        """Element at `offset`, or None when the offset lies outside the
+        event's value extent. A watchpoint armed at a high offset can trap
+        on a shorter event at the same (recycled) address; clamping would
+        silently compare the wrong element, so classification must skip —
+        and disarm — instead (see EventEngine._check_traps)."""
+        if self.values is None:
+            return None
         flat = self.values.reshape(-1)
-        return flat[min(offset, flat.size - 1)]
+        if offset >= flat.size:
+            return None
+        return flat[offset]
 
     def digest(self, size: int = 8) -> str:
         """Content fingerprint (Tier-3 silent-data-load hashing). The only
@@ -166,6 +175,11 @@ class EventEngine:
         self.detect = set(self.cfg.detect)
         self.rng = np.random.RandomState(self.cfg.seed)
         self.sampler = GeometricSampler(self.cfg.period, self.rng)
+        # store-side client selection (dead vs silent) draws from its own
+        # stream so it never perturbs the sampler's geometric gaps
+        self.client_rng = np.random.RandomState(self.cfg.seed + 0x5EED)
+        self._store_clients = tuple(
+            c for c in ("dead_store", "silent_store") if c in self.detect)
         self.profile = WasteProfile(tier=tier,
                                     sampling_period=self.sampler.period)
         self.wp = {}
@@ -209,17 +223,29 @@ class EventEngine:
         prof.bump_total("store_events", ev.nelems)
         prof.bump_total("store_bytes", ev.nbytes)
         self._check_traps(STORE, ev)
+        if not self._store_clients:
+            self.sampler.advance(ev.nelems)
+            return
         for off in self.sampler.advance(ev.nelems):
-            if "dead_store" in self.detect:
-                self.wp[STORE].on_sample(Watchpoint(
-                    address=ev.address, offset=off, size=ev.itemsize,
-                    value=None, context=ev.ctx, trap_type="RW_TRAP",
-                    meta="dead_store"))
-            if "silent_store" in self.detect:
-                self.wp[STORE].on_sample(Watchpoint(
-                    address=ev.address, offset=off, size=ev.itemsize,
-                    value=ev.value_at(off), context=ev.ctx,
-                    trap_type="W_TRAP", meta="silent_store"))
+            # one-sample-one-watchpoint (paper §5.2): a single PMU sample
+            # arms exactly one client, chosen uniformly, so dead- and
+            # silent-store detection share the reservoir at the pressure
+            # one PMU stream generates instead of doubling it
+            client = (self._store_clients[0] if len(self._store_clients) == 1
+                      else self._store_clients[
+                          self.client_rng.randint(len(self._store_clients))])
+            value = None
+            if client == "silent_store":
+                value = ev.value_at(off)
+                if value is None:        # no comparable value at this offset
+                    client = "dead_store"
+                    if "dead_store" not in self.detect:
+                        continue
+            self.wp[STORE].on_sample(Watchpoint(
+                address=ev.address, offset=off, size=ev.itemsize,
+                value=value, context=ev.ctx,
+                trap_type="RW_TRAP" if client == "dead_store" else "W_TRAP",
+                meta=client))
 
     def _on_load(self, ev: MemEvent) -> None:
         prof = self.profile
@@ -228,15 +254,23 @@ class EventEngine:
         self._check_traps(LOAD, ev)
         if "silent_load" in self.detect:
             for off in self.sampler.advance(ev.nelems):
+                value = ev.value_at(off)
+                if value is None:        # no comparable value at this offset
+                    continue
                 self.wp[LOAD].on_sample(Watchpoint(
                     address=ev.address, offset=off, size=ev.itemsize,
-                    value=ev.value_at(off), context=ev.ctx,
+                    value=value, context=ev.ctx,
                     trap_type="RW_TRAP", meta="silent_load"))
 
     def _check_traps(self, access: str, ev: MemEvent) -> None:
         prof = self.profile
-        for wp in self.wp[STORE].matching(
-                lambda w: w.address == ev.address and w.offset < ev.nelems):
+        for wp in self.wp[STORE].matching(lambda w: w.address == ev.address):
+            if wp.offset >= ev.nelems:
+                # stale watchpoint: a shorter event at the same (recycled)
+                # address means the watched element no longer exists —
+                # skip classification entirely and free the slot
+                self.wp[STORE].disarm(wp)
+                continue
             if wp.meta == "dead_store":
                 # Def. 1: store;store with no intervening load is dead
                 hit = access == STORE
@@ -246,18 +280,28 @@ class EventEngine:
                                   ev.ctx, wp.size)
                 self.wp[STORE].disarm(wp)
             elif wp.meta == "silent_store" and access == STORE:
+                cur = ev.value_at(wp.offset)
+                if cur is None:          # offset outside the value extent
+                    self.wp[STORE].disarm(wp)
+                    continue
                 # Def. 2: overwrite with the value already there
-                hit = approx_equal(wp.value, ev.value_at(wp.offset), self.tol)
+                hit = approx_equal(wp.value, cur, self.tol)
                 prof.observe("silent_store", hit)
                 if hit:
                     prof.add_pair("silent_store", self.tier, wp.context,
                                   ev.ctx, wp.size)
                 self.wp[STORE].disarm(wp)
-        for wp in self.wp[LOAD].matching(
-                lambda w: w.address == ev.address and w.offset < ev.nelems):
+        for wp in self.wp[LOAD].matching(lambda w: w.address == ev.address):
+            if wp.offset >= ev.nelems:
+                self.wp[LOAD].disarm(wp)
+                continue
             if access == LOAD:
+                cur = ev.value_at(wp.offset)
+                if cur is None:
+                    self.wp[LOAD].disarm(wp)
+                    continue
                 # Def. 3: load of the value already loaded
-                hit = approx_equal(wp.value, ev.value_at(wp.offset), self.tol)
+                hit = approx_equal(wp.value, cur, self.tol)
                 prof.observe("silent_load", hit)
                 if hit:
                     prof.add_pair("silent_load", self.tier, wp.context,

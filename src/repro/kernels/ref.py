@@ -18,7 +18,13 @@ import jax.numpy as jnp
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, q_offset=0,
                   kv_len: Optional[jax.Array] = None) -> jax.Array:
-    """q: (B,Sq,Hq,D), k/v: (B,Skv,Hkv,D) -> (B,Sq,Hq,D). f32 accumulate."""
+    """q: (B,Sq,Hq,D), k/v: (B,Skv,Hkv,D) -> (B,Sq,Hq,D). f32 accumulate.
+
+    ``q_offset``/``kv_len`` may be scalars (one decode position for the
+    whole batch) or (B,) vectors (per-slot positions — the serving
+    engine's continuous-batching cache, where every row sits at its own
+    sequence offset).
+    """
     B, Sq, Hq, D = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
     G = Hq // Hkv
@@ -29,15 +35,15 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     mask = None
     if causal:
-        qpos = q_offset + jnp.arange(Sq)
-        kpos = jnp.arange(Skv)
-        mask = qpos[:, None] >= kpos[None, :]
+        qpos = jnp.asarray(q_offset)[..., None] + jnp.arange(Sq)
+        mask = qpos[..., :, None] >= jnp.arange(Skv)   # (Sq,Skv) | (B,Sq,Skv)
     if kv_len is not None:
-        lmask = jnp.arange(Skv)[None, :] < jnp.asarray(kv_len)
-        lmask = jnp.broadcast_to(lmask, (Sq, Skv))
+        lmask = jnp.arange(Skv) < jnp.asarray(kv_len)[..., None]
+        lmask = lmask[..., None, :]              # (1,Skv) | (B,1,Skv)
         mask = lmask if mask is None else (mask & lmask)
     if mask is not None:
-        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+        bmask = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
+        scores = jnp.where(bmask, scores, -jnp.inf)
 
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)

@@ -1,7 +1,14 @@
-"""Batched serving driver: prefill + greedy decode with KV cache.
+"""Serving driver: continuous-batching engine with batched prefill,
+KV-cache waste detectors, and honest prefill-vs-decode accounting.
 
 CPU smoke:  PYTHONPATH=src python -m repro.launch.serve \
                 --arch qwen3-1.7b --smoke --batch 4 --prompt-len 32 --gen 16
+
+Dense/MoE families run on `serve.engine.ServeEngine` (single-pass
+batched prefill + per-slot decode positions + slot recycling); families
+without an indexed KV cache in every block (hybrid/ssm/vlm/audio) fall
+back to the legacy token-loop, with prefill and decode still timed
+separately.
 """
 from __future__ import annotations
 
@@ -14,6 +21,7 @@ import numpy as np
 
 from repro.configs import registry
 from repro.configs.base import ProfilerConfig
+from repro.core.detectors import ServingDetectors
 from repro.core.findings import merge_profiles
 from repro.core.hlo_waste import analyze_waste
 from repro.core.interpreter import profile_fn
@@ -21,6 +29,56 @@ from repro.core.report import dump_json
 from repro.data.synthetic import batch_at
 from repro.models.zoo import build_model
 from repro.serve.decode import make_serve_step
+from repro.serve.engine import ENGINE_FAMILIES, Request, ServeEngine
+
+
+def _run_engine(cfg, model, params, prompts, gen, seed, profile):
+    batch, prompt_len = prompts.shape
+    max_len = prompt_len + gen + 1
+    det = ServingDetectors(ProfilerConfig(enabled=True, seed=seed)) \
+        if profile else None
+    eng = ServeEngine(model, params, num_slots=batch, max_len=max_len,
+                      detectors=det, kv_dtype=jnp.float32)
+    for b in range(batch):
+        eng.submit(Request(rid=f"r{b}", tokens=np.asarray(prompts[b]),
+                           max_new_tokens=gen))
+    eng.run()
+    out = jnp.asarray(np.stack(
+        [np.asarray(eng.finished[f"r{b}"].generated[:gen], np.int32)
+         for b in range(batch)]))
+    tp = eng.throughput()
+    tier3 = det.report if det is not None else None
+    tier2_subject = eng.lowered_tick() if profile else None
+    return out, tp, tier3, tier2_subject
+
+
+def _run_legacy(cfg, model, params, prompts, gen, kw):
+    """Token-loop driver for families without an indexed KV cache."""
+    batch, prompt_len = prompts.shape
+    max_len = prompt_len + gen + 1
+    cache = model.init_cache(params, batch, max_len,
+                             kv_dtype=jnp.float32, **kw)
+    serve_step = jax.jit(make_serve_step(model), donate_argnums=(1,))
+
+    t0 = time.perf_counter()
+    for t in range(prompt_len):
+        nxt, cache = serve_step(params, cache, prompts[:, t:t + 1])
+    nxt.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    generated = [nxt]
+    for _ in range(gen - 1):
+        nxt, cache = serve_step(params, cache, generated[-1])
+        generated.append(nxt)
+    nxt.block_until_ready()
+    t_decode = time.perf_counter() - t0
+
+    out = jnp.concatenate(generated, axis=1)
+    tp = {"prefill_tok_s": batch * prompt_len / max(t_prefill, 1e-9),
+          "decode_tok_s": batch * gen / max(t_decode, 1e-9)}
+    lowered = serve_step.lower(params, cache, generated[-1])
+    return out, tp, cache, lowered
 
 
 def run(arch: str, *, smoke: bool = True, batch: int = 4,
@@ -40,38 +98,37 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
     if cfg.family == "audio":
         kw["frames"] = jnp.asarray(data["frames"])
 
-    max_len = prompt_len + gen + 1
-    cache = model.init_cache(params, batch, max_len, kv_dtype=jnp.float32, **kw)
+    tier3 = None
+    if cfg.family in ENGINE_FAMILIES:
+        out, tp, tier3, tier2_subject = _run_engine(
+            cfg, model, params, prompts, gen, seed, profile)
+    else:
+        out, tp, _, tier2_subject = _run_legacy(
+            cfg, model, params, prompts, gen, kw)
 
-    serve_step = jax.jit(make_serve_step(model), donate_argnums=(1,))
-
-    # teacher-forced prefill through the decode path (exercises the cache)
-    t0 = time.time()
-    tok = prompts[:, :1]
-    for t in range(prompt_len):
-        nxt, cache = serve_step(params, cache, prompts[:, t:t + 1])
-    generated = [nxt]
-    for _ in range(gen - 1):
-        nxt, cache = serve_step(params, cache, generated[-1])
-        generated.append(nxt)
-    out = jnp.concatenate(generated, axis=1)
-    dt = time.time() - t0
-    tps = batch * (prompt_len + gen) / dt
-    print(f"[serve] {arch}: {batch} seqs, prompt {prompt_len} + gen {gen} "
-          f"in {dt:.2f}s ({tps:.0f} tok/s)")
+    # prompt tokens are NOT generated tokens: report the two rates
+    # separately (a single blended tok/s overstates decode by counting
+    # teacher-forced prefill pushes at the same rate)
+    print(f"[serve] {arch}: {batch} seqs, prompt {prompt_len} + gen {gen} | "
+          f"prefill {tp['prefill_tok_s']:.0f} tok/s, "
+          f"decode {tp['decode_tok_s']:.0f} tok/s (live slots)")
     print("[serve] sample continuation:", np.asarray(out[0])[:12])
 
     if profile:
         # one merged WasteProfile for the serving path (DESIGN.md §2):
-        # Tier-2 on the compiled decode step, Tier-1 (trace→replay) on a
-        # single-token decode microstep
-        lowered = serve_step.lower(params, cache, generated[-1])
-        tier2 = analyze_waste(lowered.compile().as_text()).profile
+        # Tier-3 serve detectors on the live engine, Tier-2 on the
+        # compiled decode step, Tier-1 (trace→replay) on a single-token
+        # decode microstep
+        tier2 = analyze_waste(tier2_subject.compile().as_text()).profile
         pc = ProfilerConfig(enabled=True, period=5000, seed=seed)
+        cache1 = model.init_cache(params, batch, prompt_len + gen + 1,
+                                  kv_dtype=jnp.float32, **kw)
+        tok1 = out[:, -1:]
         tier1 = profile_fn(
-            lambda tok: make_serve_step(model)(params, cache, tok)[0],
-            generated[-1], cfg=pc, epochs=2)
-        merged = merge_profiles([tier1, tier2])
+            lambda tok: make_serve_step(model)(params, cache1, tok)[0],
+            tok1, cfg=pc, epochs=2)
+        profs = [tier1, tier2] + ([tier3] if tier3 is not None else [])
+        merged = merge_profiles(profs)
         print(merged.render(top_k=3))
         if profile_out:
             dump_json(merged, profile_out)

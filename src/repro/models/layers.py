@@ -107,9 +107,13 @@ def apply_attention(p, cfg: ModelConfig, x: jax.Array, *,
     q_offset = 0
     if use_rope and kv_src is None:
         if cache is not None:
-            pos_q = cache["idx"] + jnp.arange(S)
-            q = apply_rope(q, pos_q[None, :], cfg.rope_theta)
-            k = apply_rope(k, pos_q[None, :], cfg.rope_theta)
+            idx0 = cache["idx"]
+            if jnp.ndim(idx0) == 1:              # per-slot positions (B,)
+                pos_q = idx0[:, None] + jnp.arange(S)[None, :]
+            else:
+                pos_q = (idx0 + jnp.arange(S))[None, :]
+            q = apply_rope(q, pos_q, cfg.rope_theta)
+            k = apply_rope(k, pos_q, cfg.rope_theta)
         else:
             pos = positions if positions is not None else jnp.arange(S)
             q = apply_rope(q, pos, cfg.rope_theta)
@@ -119,7 +123,7 @@ def apply_attention(p, cfg: ModelConfig, x: jax.Array, *,
     kv_len = None
     if cache is not None and kv_src is None:
         idx = cache["idx"]
-        if S == 1:
+        if S == 1 and jnp.ndim(idx) == 0:
             # one-token decode: sharded flash-decoding when the cache is
             # sequence-chunk sharded (see serve/flash_decode.py)
             from repro.serve.flash_decode import (decode_attention_sharded,
@@ -139,8 +143,17 @@ def apply_attention(p, cfg: ModelConfig, x: jax.Array, *,
                 return shard(out, "btd"), new_cache
         # fallback: in-place update + masked attention (single device /
         # unshardable shapes)
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        if jnp.ndim(idx) == 1:
+            # per-slot write positions (serving engine): each row lands at
+            # its own sequence offset
+            upd = jax.vmap(
+                lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
+                    c, u, i, axis=0))
+            ck = upd(cache["k"], k.astype(cache["k"].dtype), idx)
+            cv = upd(cache["v"], v.astype(cache["v"].dtype), idx)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
         new_cache = {"k": ck, "v": cv, "idx": idx + S}
         k, v = ck.astype(dt), cv.astype(dt)
         kv_len = idx + S

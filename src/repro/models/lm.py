@@ -385,8 +385,69 @@ class LM:
             cache["main"][name] = sub
         return cache
 
+    # ------------------------- cache index --------------------------
+    def cache_index(self, cache) -> jax.Array:
+        """Current write index of the decode cache: scalar, or (B,) when
+        the cache has per-slot positions (serving engine)."""
+        main = cache["main"]
+        layer0 = main[0] if isinstance(main, list) else main
+        for sub in layer0.values():
+            if "idx" in sub:
+                idx = sub["idx"]
+                return idx if isinstance(main, list) else idx[0]
+        raise ValueError("cache has no indexed KV sub-block")
+
+    def with_cache_index(self, cache, idx) -> Any:
+        """Return `cache` with every KV sub-block's write index replaced
+        by `idx` (scalar, or (B,) for per-slot serving positions)."""
+        idx = jnp.asarray(idx, jnp.int32)
+
+        def set_in(tree, n):
+            out = {}
+            for name, sub in tree.items():
+                if "idx" in sub:
+                    sub = {**sub,
+                           "idx": jnp.broadcast_to(idx, (n,) + idx.shape)}
+                out[name] = sub
+            return out
+
+        new = dict(cache)
+        if isinstance(cache["main"], list):      # decode_unroll layout
+            new["main"] = [
+                {name: ({**sub, "idx": idx} if "idx" in sub else sub)
+                 for name, sub in layer.items()}
+                for layer in cache["main"]]
+        else:
+            new["main"] = set_in(cache["main"], self.sched.n_super)
+        if "tail" in cache:
+            new["tail"] = set_in(cache["tail"], len(self.sched.tail))
+        return new
+
+    # ------------------------------ prefill --------------------------
+    def prefill(self, params, cache, tokens: jax.Array, *,
+                lengths: Optional[jax.Array] = None) -> Tuple[jax.Array, Any]:
+        """Single-pass batched cache fill: one forward through the
+        decode/cache path over the whole prompt instead of `prompt_len`
+        sequential decode steps.
+
+        tokens: (B, P) prompt tokens, right-padded when lengths vary;
+        lengths: optional (B,) true prompt lengths. Writes K/V for all P
+        positions of every row in one call; with `lengths` the cache's
+        write index is set per-row so padded tail positions (whose K/V
+        are garbage — dead stores by construction) are masked out and
+        overwritten as decode advances. Returns (logits (B,P,V), cache).
+        Per-position K/V depend only on the causal prefix, so entries
+        below each row's true length are exactly the token-by-token
+        values (bit-identical on the shared fallback attention path).
+        """
+        logits, cache = self.decode_step(params, cache, tokens)
+        if lengths is not None:
+            cache = self.with_cache_index(
+                cache, jnp.asarray(lengths, jnp.int32))
+        return logits, cache
+
     def decode_step(self, params, cache, tokens: jax.Array) -> Tuple[jax.Array, Any]:
-        """One decode step. tokens: (B, 1). Returns (logits, new_cache)."""
+        """One decode step. tokens: (B, S). Returns (logits, new_cache)."""
         cfg, sch = self.cfg, self.sched
         dt = jnp.dtype(cfg.dtype)
         x = jnp.take(params["embed"], tokens, axis=0).astype(dt)

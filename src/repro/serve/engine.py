@@ -1,0 +1,287 @@
+"""Continuous-batching serving engine (DESIGN.md §2, serving tier).
+
+Production-shaped serving over a fixed-size decode batch:
+
+  * **Batched prefill** — a request's whole prompt fills its KV-cache row
+    in ONE jitted `model.prefill` call (not `prompt_len` sequential
+    decode steps). Admission groups waiting requests into one padded
+    prefill; non-admitted rows are merged back untouched.
+  * **Per-slot positions** — the cache write index is a (B,) vector, so
+    every slot sits at its own sequence offset: requests arrive, finish
+    (EOS / max-new-tokens) and recycle their slot independently while
+    the batch keeps stepping.
+  * **Honest accounting** — prefill and decode token counts/times are
+    tracked separately, and decode throughput is measured over *live*
+    slots only (idle slots still burn compute; that is the point).
+  * **Waste detection** — the decode batch writes K/V for every slot
+    every tick whether or not it serves a request. With
+    `core.detectors.ServingDetectors` attached, idle-slot writes trap as
+    dead/silent KV stores and duplicate prompt prefixes as silent prefix
+    loads, all in the unified WasteProfile.
+
+The engine needs every sub-block of the architecture to carry an indexed
+KV cache, so it supports the "dense" and "moe" families; other families
+are served by the legacy token-loop in `launch/serve.py`.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.detectors import ServingDetectors, SlotWrite
+
+ENGINE_FAMILIES = ("dense", "moe")
+
+
+@dataclass
+class Request:
+    """One serving request: prompt in, greedy continuation out."""
+    rid: str
+    tokens: np.ndarray                 # (L,) int32 prompt
+    max_new_tokens: int = 16
+    arrival: int = 0                   # earliest engine step for admission
+    # filled by the engine:
+    generated: List[int] = field(default_factory=list)
+    prefill_step: int = -1
+    finish_step: int = -1
+
+    @property
+    def done(self) -> bool:
+        return self.finish_step >= 0
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Pad prompt groups to power-of-two lengths: bounded jit cache."""
+    p = lo
+    while p < n:
+        p *= 2
+    return p
+
+
+class ServeEngine:
+    """Fixed-size decode batch + waiting queue + slot recycling."""
+
+    def __init__(self, model, params, *, num_slots: int = 4,
+                 max_len: int = 128, eos_id: Optional[int] = None,
+                 detectors: Optional[ServingDetectors] = None,
+                 kv_dtype=jnp.float32):
+        if model.cfg.family not in ENGINE_FAMILIES:
+            raise ValueError(
+                f"ServeEngine needs an indexed KV cache in every block; "
+                f"family {model.cfg.family!r} is served by the legacy "
+                f"token-loop driver")
+        self.model = model
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.detectors = detectors
+
+        cache = model.init_cache(params, num_slots, max_len,
+                                 kv_dtype=kv_dtype)
+        self.cache = model.with_cache_index(
+            cache, jnp.zeros((num_slots,), jnp.int32))
+        self.tokens = jnp.zeros((num_slots, 1), jnp.int32)
+
+        self.slots: List[Optional[Request]] = [None] * num_slots
+        self._lengths = np.zeros(num_slots, np.int64)  # host mirror of idx
+        self._queue: Deque[Request] = deque()
+        self.finished: Dict[str, Request] = {}
+        self.step_no = 0
+        self.stats = {"prefill_tokens": 0, "decode_tokens": 0,
+                      "prefill_s": 0.0, "decode_s": 0.0, "ticks": 0,
+                      "prefills": 0}
+
+        self._tick_fn = jax.jit(self._make_tick())
+        self._prefill_fn = jax.jit(self._make_prefill())
+
+        # detector geometry: the KV sub-blocks of one scanned superblock
+        main = self.cache["main"]
+        self._kv_names = [n for n, sub in main.items() if "k" in sub]
+        if detectors is not None:
+            site = sum(
+                2 * int(np.prod(main[n]["k"].shape[3:]))
+                * main[n]["k"].dtype.itemsize
+                for n in self._kv_names)
+            detectors.bind(num_layers=model.sched.n_super, site_bytes=site)
+            self._peek_fn = jax.jit(self._make_peek())
+
+    # ---------------------------- jitted steps ------------------------
+    def _make_tick(self):
+        model = self.model
+
+        def tick(params, cache, tokens, active):
+            idx0 = model.cache_index(cache)            # (B,)
+            logits, new_cache = model.decode_step(params, cache, tokens)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            nxt = jnp.where(active[:, None], nxt[:, None], tokens)
+            # idle slots freeze token AND write index: every tick rewrites
+            # the same K/V site with the same value — the serving-tier
+            # dead/silent store the detectors trap on
+            new_cache = model.with_cache_index(
+                new_cache, jnp.where(active, idx0 + 1, idx0))
+            return nxt, new_cache
+        return tick
+
+    def _make_prefill(self):
+        model = self.model
+
+        def prefill(params, cache, toks, admit, lengths, prev_tokens):
+            B = toks.shape[0]
+            idx0 = model.cache_index(cache)
+            fresh = model.with_cache_index(
+                cache, jnp.zeros((B,), jnp.int32))
+            logits, filled = model.prefill(params, fresh, toks)
+
+            def sel(n, o):
+                m = admit.reshape((1, -1) + (1,) * (n.ndim - 2))
+                return jnp.where(m, n, o)
+            merged = jax.tree_util.tree_map(sel, filled, cache)
+            merged = model.with_cache_index(
+                merged, jnp.where(admit, lengths, idx0))
+            first = jnp.argmax(
+                logits[jnp.arange(B), lengths - 1], axis=-1).astype(jnp.int32)
+            toks_out = jnp.where(admit[:, None], first[:, None], prev_tokens)
+            return toks_out, merged
+        return prefill
+
+    def _make_peek(self):
+        names = self._kv_names
+
+        def peek(cache, layer, slot, pos):
+            outs = []
+            for name in names:
+                sub = cache["main"][name]
+                outs.append(sub["k"][layer, slot, pos].reshape(-1))
+                outs.append(sub["v"][layer, slot, pos].reshape(-1))
+            return jnp.concatenate(outs).astype(jnp.float32)
+        return peek
+
+    def _peek(self, layer: int, slot: int, pos: int) -> np.ndarray:
+        return np.asarray(self._peek_fn(self.cache, layer, slot, pos))
+
+    # ------------------------------ schedule ---------------------------
+    def submit(self, req: Request) -> None:
+        assert req.tokens.ndim == 1 and req.tokens.size >= 1
+        assert req.tokens.size < self.max_len, "prompt exceeds cache"
+        assert req.max_new_tokens >= 1
+        self._queue.append(req)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue) + sum(r is not None for r in self.slots)
+
+    def _accept_token(self, slot: int, req: Request, tok: int) -> None:
+        req.generated.append(int(tok))
+        limit = min(req.max_new_tokens,
+                    self.max_len - req.tokens.size)
+        if ((self.eos_id is not None and tok == self.eos_id)
+                or len(req.generated) >= limit):
+            req.finish_step = self.step_no
+            self.finished[req.rid] = req
+            self.slots[slot] = None        # recycle: slot idles until reuse
+            if self.detectors is not None:
+                self.detectors.on_finish(self.step_no, slot, req.rid)
+
+    def _admit(self) -> None:
+        free = [b for b, r in enumerate(self.slots) if r is None]
+        group: List[Request] = []
+        while free[len(group):] and self._queue \
+                and self._queue[0].arrival <= self.step_no:
+            group.append(self._queue.popleft())
+        if not group:
+            return
+        B = self.num_slots
+        # power-of-two padding for a bounded jit cache, capped at the
+        # cache extent (prompts are < max_len by submit's contract)
+        P = min(_bucket(max(r.tokens.size for r in group)), self.max_len)
+        toks = np.zeros((B, P), np.int32)
+        admit = np.zeros(B, bool)
+        lengths = np.ones(B, np.int32)
+        taken = free[:len(group)]
+        for b, req in zip(taken, group):
+            L = req.tokens.size
+            toks[b, :L] = req.tokens
+            admit[b] = True
+            lengths[b] = L
+            if self.detectors is not None:
+                # the prefill store sweeps the full padded extent [0, P)
+                self.detectors.on_admit(self.step_no, b, req.rid,
+                                        req.tokens, padded_len=P)
+            self.slots[b] = req
+            self._lengths[b] = L
+            req.prefill_step = self.step_no
+
+        t0 = time.perf_counter()
+        toks_out, self.cache = self._prefill_fn(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(admit), jnp.asarray(lengths), self.tokens)
+        toks_out.block_until_ready()
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += int(sum(r.tokens.size
+                                                for r in group))
+        self.stats["prefills"] += 1
+        self.tokens = toks_out
+        host = np.asarray(toks_out)[:, 0]
+        for b, req in zip(taken, group):
+            self._accept_token(b, req, host[b])
+
+    def _decode_tick(self) -> None:
+        active = np.array([r is not None for r in self.slots])
+        write_pos = self._lengths.copy()   # the position each slot writes
+        t0 = time.perf_counter()
+        nxt, self.cache = self._tick_fn(self.params, self.cache,
+                                        self.tokens, jnp.asarray(active))
+        nxt.block_until_ready()
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_tokens"] += int(active.sum())
+        self.stats["ticks"] += 1
+        self.tokens = nxt
+        self._lengths[active] += 1
+        host = np.asarray(nxt)[:, 0]
+        slots_now = list(self.slots)
+        for b, req in enumerate(slots_now):
+            if req is not None:
+                self._accept_token(b, req, host[b])
+        if self.detectors is not None:
+            writes = [SlotWrite(b, req.rid if req is not None else None,
+                                req is not None, int(write_pos[b]))
+                      for b, req in enumerate(slots_now)]
+            self.detectors.on_step(self.step_no, writes, self._peek)
+
+    def step(self) -> None:
+        """One scheduler step: admit into free slots, then one decode
+        tick over the whole batch."""
+        self._admit()
+        self._decode_tick()
+        self.step_no += 1
+
+    def run(self, max_steps: int = 100_000) -> Dict[str, Request]:
+        """Drive until every submitted request has finished."""
+        steps = 0
+        while self.pending and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished
+
+    # ---------------------------- reporting ----------------------------
+    def throughput(self) -> Dict[str, float]:
+        s = self.stats
+        return {
+            "prefill_tok_s": (s["prefill_tokens"] / s["prefill_s"]
+                              if s["prefill_s"] else 0.0),
+            "decode_tok_s": (s["decode_tokens"] / s["decode_s"]
+                             if s["decode_s"] else 0.0),
+        }
+
+    def lowered_tick(self):
+        """Lowered decode tick (Tier-2 HLO waste analysis subject)."""
+        active = jnp.ones((self.num_slots,), bool)
+        return self._tick_fn.lower(self.params, self.cache, self.tokens,
+                                   active)

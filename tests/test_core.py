@@ -11,6 +11,7 @@ from _hypo import given, settings, st
 from repro.configs.base import ProfilerConfig
 from repro.core.context import PairTable
 from repro.core.detectors import TrainingDetectors
+from repro.core.events import LOAD, STORE, EventEngine, MemEvent
 from repro.core.interpreter import profile_fn
 from repro.core.reservoir import ReservoirWatchpoints, Watchpoint
 
@@ -152,6 +153,102 @@ def test_fractions_stable_across_periods():
         fr.append(profile_fn(linear_search, *args, cfg=cfg)
                   .fractions()["silent_load"])
     assert max(fr) - min(fr) < 0.35, fr
+
+
+# ----------------------------------------------------------------------
+# Trap-matching edge cases (watchpoint substrate)
+# ----------------------------------------------------------------------
+def _store_ev(addr, values, ctx=("s",)):
+    values = np.asarray(values, np.float32)
+    return MemEvent(kind=STORE, address=addr, nelems=values.size,
+                    itemsize=4, values=values, ctx=ctx)
+
+
+def test_value_at_outside_extent_is_none():
+    ev = _store_ev(0, [1.0, 2.0, 3.0, 4.0])
+    assert float(ev.value_at(3)) == 4.0
+    assert ev.value_at(4) is None          # no clamping to the last element
+    assert ev.value_at(100) is None
+    assert MemEvent(STORE, 0, 4, 4, None, ("s",)).value_at(0) is None
+
+
+def test_trap_same_address_shorter_event_disarms_without_classify():
+    """A watchpoint armed at a high offset must not trap-classify against
+    a shorter event at the same (recycled) address: the watched element
+    no longer exists, so the slot frees without touching the checked/
+    flagged estimator."""
+    cfg = ProfilerConfig(enabled=True, period=10_000, num_watchpoints=4,
+                         detect=("silent_store",))
+    eng = EventEngine(cfg)
+    eng.wp[STORE].on_sample(Watchpoint(
+        address=7, offset=5, size=4, value=np.float32(5.0),
+        context=("arm",), trap_type="W_TRAP", meta="silent_store"))
+    eng.on_event(_store_ev(7, [5.0, 5.0], ctx=("short",)))   # nelems=2
+    assert eng.wp[STORE].armed() == []                # disarmed (stale)
+    assert eng.profile.checked.get("silent_store", 0) == 0
+    assert eng.profile.flagged.get("silent_store", 0) == 0
+
+    # in-extent offsets still classify normally
+    eng.wp[STORE].on_sample(Watchpoint(
+        address=7, offset=1, size=4, value=np.float32(5.0),
+        context=("arm",), trap_type="W_TRAP", meta="silent_store"))
+    eng.on_event(_store_ev(7, [0.0, 5.0], ctx=("short",)))
+    assert eng.profile.checked["silent_store"] == 1
+    assert eng.profile.flagged["silent_store"] == 1
+
+
+def test_trap_value_extent_shorter_than_nelems_disarms():
+    """Events whose value payload is shorter than their logical extent
+    (external engine clients) skip — never clamp — the compare."""
+    cfg = ProfilerConfig(enabled=True, period=10_000, num_watchpoints=4,
+                         detect=("silent_load",))
+    eng = EventEngine(cfg)
+    eng.wp[LOAD].on_sample(Watchpoint(
+        address=3, offset=6, size=4, value=np.float32(1.0),
+        context=("arm",), trap_type="RW_TRAP", meta="silent_load"))
+    ev = MemEvent(kind=LOAD, address=3, nelems=8, itemsize=4,
+                  values=np.ones(4, np.float32), ctx=("l",))
+    eng.on_event(ev)           # offset 6 < nelems but >= values.size
+    assert eng.wp[LOAD].armed() == []
+    assert eng.profile.checked.get("silent_load", 0) == 0
+
+
+@given(st.integers(1, 60), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_store_sampling_arms_one_watchpoint_per_sample(k, seed):
+    """One PMU sample arms exactly ONE watchpoint even with both store
+    clients enabled (the paper's one-sample-one-watchpoint discipline):
+    reservoir attempts equal the sample count, not twice it."""
+    cfg = ProfilerConfig(enabled=True, period=1, num_watchpoints=1,
+                         seed=seed,
+                         detect=("dead_store", "silent_store"))
+    eng = EventEngine(cfg)
+    for i in range(k):       # distinct addresses: no traps interfere
+        eng.on_event(_store_ev(100 + i, [float(i)], ctx=(f"c{i}",)))
+    s = eng.wp[STORE].stats
+    assert s["armed"] + s["replaced"] + s["rejected"] == k
+    armed = eng.wp[STORE].armed()
+    assert len(armed) == 1
+    assert 100 <= armed[0].address < 100 + k
+    assert armed[0].meta in ("dead_store", "silent_store")
+
+
+def test_store_reservoir_survival_uniform_with_single_client():
+    """Survival stays uniform across samples after the single-client fix
+    (each sample survives w.p. ~1/k regardless of which client it armed)."""
+    k, trials = 6, 1500
+    counts = collections.Counter()
+    for t in range(trials):
+        cfg = ProfilerConfig(enabled=True, period=1, num_watchpoints=1,
+                             seed=t,
+                             detect=("dead_store", "silent_store"))
+        eng = EventEngine(cfg)
+        for i in range(k):
+            eng.on_event(_store_ev(100 + i, [float(i)], ctx=(f"c{i}",)))
+        counts[eng.wp[STORE].armed()[0].address - 100] += 1
+    expect = trials / k
+    for i in range(k):
+        assert abs(counts[i] - expect) < 0.35 * expect, (i, counts[i])
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,219 @@
+"""Serving engine: batched-prefill equivalence (bit-identical cache,
+identical greedy continuations), continuous batching against per-sequence
+references, slot recycling, honest throughput accounting, and the
+serve-side Tier-3 KV-cache waste detectors."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import ProfilerConfig
+from repro.core.detectors import ServingDetectors
+from repro.models.zoo import build_model
+from repro.serve.engine import Request, ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _model(arch="qwen3-1.7b"):
+    cfg = dataclasses.replace(registry.get_config(arch).smoke(),
+                              dtype="float32")
+    model = build_model(cfg)
+    return cfg, model, model.init(KEY)
+
+
+def _reference_generate(model, params, prompt, gen, max_len):
+    """Per-sequence token-by-token greedy loop (the seed serving path)."""
+    cache = model.init_cache(params, 1, max_len, kv_dtype=jnp.float32)
+    toks = jnp.asarray(prompt)[None, :]
+    for t in range(prompt.size):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1])
+    out = [int(jnp.argmax(lg[:, -1]))]
+    cur = jnp.asarray([[out[-1]]], jnp.int32)
+    for _ in range(gen - 1):
+        lg, cache = model.decode_step(params, cache, cur)
+        cur = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
+        out.append(int(cur[0, 0]))
+    return out, cache
+
+
+# ----------------------------------------------------------------------
+# Batched prefill == token-by-token loop (the PR's regression criterion)
+# ----------------------------------------------------------------------
+def test_batched_prefill_bit_identical_cache_and_continuation():
+    cfg, model, params = _model()
+    B, P, G = 2, 12, 5
+    toks = jax.random.randint(KEY, (B, P), 0, cfg.vocab_size)
+    max_len = P + G + 1
+
+    loop = model.init_cache(params, B, max_len, kv_dtype=jnp.float32)
+    for t in range(P):
+        lg_loop, loop = model.decode_step(params, loop, toks[:, t:t + 1])
+    batched = model.init_cache(params, B, max_len, kv_dtype=jnp.float32)
+    lg_pre, batched = model.prefill(params, batched, toks)
+
+    for a, b in zip(jax.tree_util.tree_leaves(loop),
+                    jax.tree_util.tree_leaves(batched)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(lg_loop[:, -1]),
+                                  np.asarray(lg_pre[:, -1]))
+
+    def continue_greedy(cache, lg):
+        nxt = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
+        out = [np.asarray(nxt)]
+        for _ in range(G - 1):
+            lg, cache = model.decode_step(params, cache, nxt)
+            nxt = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
+            out.append(np.asarray(nxt))
+        return np.concatenate(out, 1)
+    np.testing.assert_array_equal(continue_greedy(loop, lg_loop),
+                                  continue_greedy(batched, lg_pre))
+
+
+def test_prefill_per_row_lengths_match_per_sequence():
+    """Padded variable-length prefill with per-slot write indices equals
+    each sequence prefilled alone."""
+    cfg, model, params = _model()
+    B, Pmax, G = 2, 10, 4
+    lens = np.array([10, 6])
+    toks = np.asarray(jax.random.randint(KEY, (B, Pmax), 0, cfg.vocab_size))
+    max_len = Pmax + G + 2
+
+    cache = model.init_cache(params, B, max_len, kv_dtype=jnp.float32)
+    cache = model.with_cache_index(cache, jnp.zeros((B,), jnp.int32))
+    lg, cache = model.prefill(params, cache, jnp.asarray(toks),
+                              lengths=jnp.asarray(lens))
+    nxt = jnp.argmax(lg[jnp.arange(B), lens - 1], -1).astype(jnp.int32)
+    got = [np.asarray(nxt)]
+    cur = nxt[:, None]
+    for _ in range(G - 1):
+        lg, cache = model.decode_step(params, cache, cur)
+        cur = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
+        got.append(np.asarray(cur[:, 0]))
+    got = np.stack(got, 1)
+
+    for b in range(B):
+        ref, _ = _reference_generate(model, params, toks[b, :lens[b]], G,
+                                     max_len)
+        np.testing.assert_array_equal(got[b], np.array(ref))
+
+
+# ----------------------------------------------------------------------
+# Continuous batching
+# ----------------------------------------------------------------------
+def test_engine_continuous_batching_matches_isolated_requests():
+    """More requests than slots, staggered arrivals, different prompt
+    lengths and budgets: every request's greedy output must equal the
+    same prompt served alone."""
+    cfg, model, params = _model()
+    max_len = 24
+    eng = ServeEngine(model, params, num_slots=2, max_len=max_len)
+    rng = np.random.RandomState(3)
+    reqs = []
+    for i, (plen, gen, arr) in enumerate(
+            [(8, 4, 0), (5, 6, 0), (7, 3, 1), (6, 5, 4)]):
+        toks = rng.randint(0, cfg.vocab_size, size=plen).astype(np.int32)
+        reqs.append(Request(rid=f"q{i}", tokens=toks,
+                            max_new_tokens=gen, arrival=arr))
+        eng.submit(reqs[-1])
+    finished = eng.run(max_steps=200)
+    assert sorted(finished) == [f"q{i}" for i in range(4)]
+    for r in reqs:
+        ref, _ = _reference_generate(model, params, r.tokens,
+                                     r.max_new_tokens, max_len)
+        assert finished[r.rid].generated == ref, r.rid
+
+
+def test_engine_slot_recycling_and_eos():
+    """EOS early exit frees the slot; a waiting request recycles it."""
+    cfg, model, params = _model()
+    # pick the token the model actually emits first as the EOS id so the
+    # request terminates on step one
+    rng = np.random.RandomState(1)
+    toks = rng.randint(0, cfg.vocab_size, size=6).astype(np.int32)
+    ref, _ = _reference_generate(model, params, toks, 1, 32)
+    eos = ref[0]
+
+    eng = ServeEngine(model, params, num_slots=1, max_len=32, eos_id=eos)
+    eng.submit(Request(rid="a", tokens=toks, max_new_tokens=50))
+    other = rng.randint(0, cfg.vocab_size, size=4).astype(np.int32)
+    eng.submit(Request(rid="b", tokens=other, max_new_tokens=3))
+    finished = eng.run(max_steps=100)
+    assert finished["a"].generated == [eos]        # stopped at EOS
+    assert len(finished["b"].generated) <= 3
+    assert finished["b"].prefill_step >= finished["a"].finish_step
+
+
+def test_engine_throughput_accounting_live_slots_only():
+    """Prefill and decode tokens are tracked separately; decode counts
+    live slots only (idle ticks do not inflate throughput)."""
+    cfg, model, params = _model()
+    eng = ServeEngine(model, params, num_slots=2, max_len=32)
+    rng = np.random.RandomState(2)
+    plens, gens = [6, 4], [2, 8]
+    for i, (plen, gen) in enumerate(zip(plens, gens)):
+        eng.submit(Request(
+            rid=f"t{i}",
+            tokens=rng.randint(0, cfg.vocab_size, size=plen).astype(np.int32),
+            max_new_tokens=gen))
+    eng.run(max_steps=100)
+    assert eng.stats["prefill_tokens"] == sum(plens)
+    # first token of each request comes from its prefill; every later
+    # token is one live decode tick
+    assert eng.stats["decode_tokens"] == sum(g - 1 for g in gens)
+    # the batch kept ticking after t0 finished: ticks > live decode work
+    assert eng.stats["ticks"] >= max(gens) - 1
+    tp = eng.throughput()
+    assert tp["prefill_tok_s"] > 0 and tp["decode_tok_s"] > 0
+
+
+# ----------------------------------------------------------------------
+# Serve-side Tier-3 detectors
+# ----------------------------------------------------------------------
+def test_engine_detectors_flag_injected_kv_waste():
+    """Injected waste: a duplicated prompt (prefix-cache opportunity) and
+    an early-finishing request whose slot idles while the batch keeps
+    decoding (dead + silent KV stores)."""
+    cfg, model, params = _model()
+    det = ServingDetectors(ProfilerConfig(enabled=True, num_watchpoints=8,
+                                          seed=0), sites_per_step=4)
+    eng = ServeEngine(model, params, num_slots=2, max_len=48,
+                      detectors=det)
+    rng = np.random.RandomState(7)
+    shared = rng.randint(0, cfg.vocab_size, size=8).astype(np.int32)
+    # slot waste: w0 finishes after 2 tokens, w1 keeps the batch running
+    eng.submit(Request(rid="w0", tokens=shared, max_new_tokens=2))
+    eng.submit(Request(rid="w1", tokens=shared.copy(),    # duplicate prompt
+                       max_new_tokens=30))
+    eng.run(max_steps=200)
+
+    rep = det.report
+    fr = rep.fractions()
+    kinds = {f.kind for f in rep.findings}
+    # duplicated prompt: the second admission re-loads w0's prefix
+    assert "silent_prefix_load" in kinds
+    dup = [f for f in rep.findings if f.kind == "silent_prefix_load"]
+    assert any("req:w0" in " ".join(f.c1) and "req:w1" in " ".join(f.c2)
+               for f in dup)
+    # w0's idle slot is rewritten every tick: dead stores (no live
+    # request) whose values are identical (silent) — both trapped
+    assert "dead_kv_store" in kinds
+    assert fr["dead_kv_store"] > 0
+    assert "silent_kv_store" in kinds, fr
+    assert fr["silent_kv_store"] > 0.5, fr
+    dead = [f for f in rep.findings if f.kind == "dead_kv_store"]
+    assert all(len(f.c1) >= 1 and len(f.c2) >= 1 for f in dead)
+    # ⟨C1,C2⟩: armed on the KV row, trapped at an engine step
+    assert any("serve.kv" in f.c1[0] for f in dead)
+    assert any(any("serve.engine" in c for c in f.c2) for f in dead)
+
+
+def test_engine_rejects_unindexed_families():
+    cfg = registry.get_config("zamba2-1.2b").smoke()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    with pytest.raises(ValueError):
+        ServeEngine(model, params, num_slots=2, max_len=16)

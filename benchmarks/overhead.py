@@ -145,9 +145,9 @@ def run_serve():
                  f"speedup={t_loop/t_batch:.1f}x"))
 
     # serve-side Tier-3 detector overhead on the continuous decode loop
-    def mk_engine(det):
+    def mk_engine(det, kv="dense"):
         eng = ServeEngine(model, params, num_slots=B, max_len=max_len,
-                          detectors=det)
+                          detectors=det, kv_layout=kv)
         rng = np.random.RandomState(0)
         for b in range(B):
             eng.submit(Request(
@@ -166,4 +166,48 @@ def run_serve():
     rows.append(("overhead.serve_decode_step", t_plain * 1e6, "baseline"))
     rows.append(("overhead.serve_tier3_step", t_det * 1e6,
                  f"slowdown={t_det/t_plain:.3f}x"))
+
+    # paged KV heap: decode tick vs dense, prefix-hit prefill speedup,
+    # and detector overhead in paged mode — the serving-side perf
+    # trajectory the detect→optimize loop opened
+    engp = mk_engine(None, kv="paged")
+    t_paged = _time(engp._decode_tick, n=10)
+    rows.append(("overhead.serve_paged_decode_step", t_paged * 1e6,
+                 f"vs_dense={t_paged/t_plain:.3f}x"))
+    engp3 = mk_engine(ServingDetectors(ProfilerConfig(enabled=True)),
+                      kv="paged")
+    t_paged_det = _time(engp3._decode_tick, n=10)
+    rows.append(("overhead.serve_paged_tier3_step", t_paged_det * 1e6,
+                 f"slowdown={t_paged_det/t_paged:.3f}x"))
+
+    # prefix-hit prefill: a duplicated prompt's admission re-pays the
+    # whole prompt in dense mode but only the final position in paged
+    # mode (the rest maps in from the prefix cache). Measured on the
+    # engine's own prefill clock (the jitted prefill dispatch; page-table
+    # pushes are host-side bookkeeping outside the hot call).
+    dup = np.random.RandomState(1).randint(
+        0, cfg.vocab_size, size=P).astype(np.int32)
+
+    def dup_prefill_time(kv, n=6):
+        eng = ServeEngine(model, params, num_slots=2, max_len=max_len,
+                          kv_layout=kv)
+        eng.submit(Request(rid="donor", tokens=dup, max_new_tokens=1))
+        eng.run()                               # donor registers P tokens
+        def one():
+            eng.submit(Request(rid=f"d{eng.step_no}", tokens=dup,
+                               max_new_tokens=1))
+            eng._admit()
+            eng.step_no += 1
+        one()                                   # warm the jit
+        t0 = eng.stats["prefill_s"]
+        for _ in range(n):
+            one()
+        return (eng.stats["prefill_s"] - t0) / n, eng.stats
+    t_dense_admit, _ = dup_prefill_time("dense")
+    t_paged_admit, stats_p = dup_prefill_time("paged")
+    hit_frac = (stats_p["prefix_hit_tokens"]
+                / max(stats_p["prefill_tokens"], 1))
+    rows.append(("overhead.serve_paged_prefill_hit", t_paged_admit * 1e6,
+                 f"speedup={t_dense_admit/t_paged_admit:.1f}x"
+                 f"|hit_frac={hit_frac:.2f}"))
     return rows

@@ -17,7 +17,11 @@ slots, some sharing a prompt prefix, different generation budgets) to
     live slots only;
   * ``ServingDetectors`` watches the KV cache: idle-slot rewrites trap
     as dead/silent KV stores, duplicated prompt prefixes as silent
-    prefix loads — one merged WasteProfile, same schema as training.
+    prefix loads — one merged WasteProfile, same schema as training;
+  * with ``--kv paged`` the engine runs the block-paged KV heap
+    (refcounted pages, copy-on-write prefix reuse): the duplicated
+    prefixes become cache hits, idle/finished slots write nothing, and
+    the same detectors report the waste eliminated.
 """
 import argparse
 
@@ -40,6 +44,8 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--kv", default="dense", choices=("dense", "paged"))
+    ap.add_argument("--page-size", type=int, default=16)
     a = ap.parse_args()
 
     cfg = registry.get_config(a.arch).smoke()
@@ -48,7 +54,8 @@ def main():
 
     det = ServingDetectors(ProfilerConfig(enabled=True))
     eng = ServeEngine(model, params, num_slots=a.slots,
-                      max_len=a.prompt_len + a.gen + 1, detectors=det)
+                      max_len=a.prompt_len + a.gen + 1, detectors=det,
+                      kv_layout=a.kv, page_size=a.page_size)
 
     rng = np.random.RandomState(0)
     shared = rng.randint(0, cfg.vocab_size, size=a.prompt_len // 2)
@@ -64,9 +71,14 @@ def main():
     eng.run()
 
     tp = eng.throughput()
-    print(f"[example] {a.requests} requests over {a.slots} slots: "
-          f"prefill {tp['prefill_tok_s']:.0f} tok/s, "
+    s = eng.stats
+    print(f"[example] {a.requests} requests over {a.slots} slots "
+          f"[kv={a.kv}]: prefill {tp['prefill_tok_s']:.0f} tok/s, "
           f"decode {tp['decode_tok_s']:.0f} tok/s (live slots)")
+    print(f"[example] prefix hits: {s['prefix_hits']} "
+          f"({s['prefix_hit_tokens']} tokens from cache), computed "
+          f"{s['prefill_computed_tokens']}/{s['prefill_tokens']} prompt "
+          f"tokens, {s['pages_freed']} pages freed")
     for rid in sorted(eng.finished):
         r = eng.finished[rid]
         print(f"  {rid}: {len(r.generated)} tokens, "

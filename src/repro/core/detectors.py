@@ -52,6 +52,11 @@ from repro.kernels import ops
 Tier3Report = WasteProfile
 StepFinding = Finding
 
+# power-of-two prefix granularities shared by the Def.-3 prefix-load
+# detector and the paged prefix cache (serve.kv_cache) — one ladder, so
+# what the detector calls a duplicate is exactly what the cache can reuse
+PREFIX_POW2 = (8, 16, 32, 64, 128, 256, 512, 1024)
+
 
 def _leaf_paths(tree) -> List[Tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
@@ -160,16 +165,23 @@ class TrainingDetectors:
 # Serving tier
 # ----------------------------------------------------------------------
 class SlotWrite:
-    """One decode-batch slot's K/V write in the current engine tick."""
+    """One decode-batch slot's K/V write in the current engine tick.
 
-    __slots__ = ("slot", "rid", "active", "pos")
+    Sites are addressed as (page, offset) so watchpoints survive page
+    remapping in the paged KV layout; the dense layout is the degenerate
+    case page == slot row, offset == position."""
+
+    __slots__ = ("slot", "rid", "active", "pos", "page", "offset")
 
     def __init__(self, slot: int, rid: Optional[str], active: bool,
-                 pos: int):
+                 pos: int, page: Optional[int] = None,
+                 offset: Optional[int] = None):
         self.slot = slot
         self.rid = rid
         self.active = active
         self.pos = pos
+        self.page = slot if page is None else page
+        self.offset = pos if offset is None else offset
 
 
 class ServingDetectors:
@@ -185,6 +197,15 @@ class ServingDetectors:
     slot's prefill sweep, or a new occupant's decode reaching the
     position. ⟨C1,C2⟩ is the arming request/layer and the trapping
     request/step.
+
+    Sites are addressed (layer, page, offset) so watchpoints survive the
+    paged layout's page remapping: in the dense layout page == slot row
+    and offset == position, while in the paged layout
+    (serve/kv_cache.py) the engine reports pool pages directly and calls
+    ``on_page_free`` when recycling frees them — armed watchpoints on a
+    freed page disarm WITHOUT classification, the same out-of-extent
+    rule ``EventEngine._check_traps`` applies to stale traps at recycled
+    addresses.
     """
 
     def __init__(self, cfg: Optional[ProfilerConfig] = None,
@@ -202,28 +223,36 @@ class ServingDetectors:
         self._hash_window = max(1, self.cfg.batch_hash_window)
         self.num_layers = 1
         self.site_bytes = 0
+        self.paged = False
 
-    def bind(self, *, num_layers: int, site_bytes: int) -> None:
-        """Engine geometry: layer count and bytes per K/V site."""
+    def bind(self, *, num_layers: int, site_bytes: int,
+             paged: bool = False) -> None:
+        """Engine geometry: layer count, bytes per K/V site, KV layout."""
         self.num_layers = max(1, num_layers)
         self.site_bytes = site_bytes
+        self.paged = paged
 
     # -- silent prefix loads -------------------------------------------
     @staticmethod
     def _prefix_lengths(n: int) -> List[int]:
         """Power-of-two prefixes (≥8) plus the full prompt, shortest
         first, so shared prefixes of different-length prompts match."""
-        out = [p for p in (8, 16, 32, 64, 128, 256, 512, 1024) if p < n]
+        out = [p for p in PREFIX_POW2 if p < n]
         out.append(n)
         return out
 
     def on_admit(self, step: int, slot: int, rid: str,
                  tokens: np.ndarray,
-                 padded_len: Optional[int] = None) -> List[Finding]:
+                 padded_len: Optional[int] = None,
+                 reuse_len: int = 0) -> List[Finding]:
         """Admission: prefix-digest dedup + recycle traps for the slot.
 
         padded_len: extent of the prefill's store sweep — the padded
-        prompt length, ≥ tokens.size (engines pad admission groups)."""
+        prompt length, ≥ tokens.size (engines pad admission groups);
+        None when the prefill sweeps no stale rows (paged layout).
+        reuse_len: prompt positions served from a prefix cache — only a
+        duplicated prefix LONGER than this was actually re-loaded and
+        re-computed, so shorter duplicates are cache hits, not waste."""
         out: List[Finding] = []
         tokens = np.asarray(tokens)
         swept = max(int(padded_len or 0), tokens.size)
@@ -238,14 +267,15 @@ class ServingDetectors:
                           values=tokens[:plen], ctx=ctx2)
             key = f"prefix{plen}:{ev.digest()}"
             keys.append(key)
-            if key in self._prefix_hashes:
+            if key in self._prefix_hashes and plen > reuse_len:
                 hit = (plen, self._prefix_hashes[key][1])
         self.report.observe("silent_prefix_load", hit is not None)
         if hit is not None:
-            plen, c1 = hit       # longest duplicated prefix wins
+            plen, c1 = hit       # longest re-paid duplicated prefix wins
             f = self.report.add_pair(
                 "silent_prefix_load", 3, c1, ctx2,
-                plen * int(tokens.dtype.itemsize), prefix_len=plen)
+                (plen - reuse_len) * int(tokens.dtype.itemsize),
+                prefix_len=plen, reuse_len=reuse_len)
             out.append(f)
         for key in keys:
             if key in self._prefix_hashes:
@@ -255,25 +285,29 @@ class ServingDetectors:
         while len(self._prefix_hashes) > self._hash_window:
             self._prefix_hashes.popitem(last=False)
 
-        # recycle traps: the prefill store sweeps [0, padded_len) of this
-        # slot's rows — watched sites in that range are overwritten now
-        # (padded-tail positions included: their old value is destroyed
-        # by garbage K/V). The old value is gone, so silent-client
-        # watchpoints disarm without classification (the substrate's
-        # out-of-extent rule); dead-client ones classify: no live read
-        # since arming ⇒ dead.
-        for wp in list(self.wp.armed()):
-            m = wp.meta
-            if m["slot"] != slot or m["pos"] >= swept:
-                continue
-            if m["client"] == "dead_kv_store":
-                dead = not m["live"]
-                self.report.observe("dead_kv_store", dead)
-                if dead:
-                    f = self.report.add_pair("dead_kv_store", 3,
-                                             wp.context, ctx2, wp.size)
-                    out.append(f)
-            self.wp.disarm(wp)
+        # recycle traps (dense layout only): the prefill store sweeps
+        # [0, padded_len) of this slot's rows — watched sites in that
+        # range are overwritten now (padded-tail positions included:
+        # their old value is destroyed by garbage K/V). The old value is
+        # gone, so silent-client watchpoints disarm without
+        # classification (the substrate's out-of-extent rule);
+        # dead-client ones classify: no live read since arming ⇒ dead.
+        # In the paged layout the prefill writes only freshly-allocated
+        # pages — a recycled slot's old pages were freed (on_page_free
+        # disarmed their traps), so there is no stale sweep to scan.
+        if not self.paged:
+            for wp in list(self.wp.armed()):
+                m = wp.meta
+                if m["slot"] != slot or m["pos"] >= swept:
+                    continue
+                if m["client"] == "dead_kv_store":
+                    dead = not m["live"]
+                    self.report.observe("dead_kv_store", dead)
+                    if dead:
+                        f = self.report.add_pair("dead_kv_store", 3,
+                                                 wp.context, ctx2, wp.size)
+                        out.append(f)
+                self.wp.disarm(wp)
         return out
 
     def on_finish(self, step: int, slot: int, rid: str) -> None:
@@ -282,21 +316,35 @@ class ServingDetectors:
             if wp.meta["slot"] == slot and wp.meta["rid"] == rid:
                 wp.meta["live"] = False
 
+    def on_page_free(self, pages: Sequence[int]) -> None:
+        """Paged layout: recycling freed these pool pages. The watched
+        values no longer exist, so armed traps on them are STALE — they
+        disarm without classification (out-of-extent rule), exactly like
+        a shorter event at a recycled address in the substrate."""
+        freed = set(int(p) for p in pages)
+        if not freed:
+            return
+        for wp in list(self.wp.armed()):
+            if wp.meta.get("page") in freed:
+                self.wp.disarm(wp)
+
     # -- per-tick watchpoints ------------------------------------------
     def on_step(self, step: int, writes: Sequence[SlotWrite],
                 peek: Callable[[int, int, int], Any]) -> List[Finding]:
-        """One engine decode tick: every slot wrote one K/V row.
+        """One engine decode tick's K/V stores.
 
-        writes: per-slot view of this tick's stores (position written).
-        peek(layer, slot, pos) -> the K/V values now at that site.
+        writes: per-slot view of this tick's stores, addressed by
+        (page, offset) site — every slot in the dense layout, live slots
+        only in the paged layout (idle stores were dropped).
+        peek(layer, page, offset) -> the K/V values now at that site.
         """
         out: List[Finding] = []
-        by_slot = {w.slot: w for w in writes}
+        by_site = {(w.page, w.offset): w for w in writes}
 
         for wp in list(self.wp.armed()):
             m = wp.meta
-            w = by_slot.get(m["slot"])
-            if w is None or w.pos != m["pos"]:
+            w = by_site.get((m["page"], m["offset"]))
+            if w is None:
                 continue                 # no store at the watched site
             ctx2 = (f"serve.engine:step{step}", f"slot:{w.slot}",
                     f"req:{w.rid or 'idle'}")
@@ -310,7 +358,7 @@ class ServingDetectors:
                         "dead_kv_store", 3, wp.context, ctx2, wp.size))
             else:
                 # Def. 2 analogue: same site rewritten with the same value
-                cur = np.asarray(peek(m["layer"], w.slot, w.pos))
+                cur = np.asarray(peek(m["layer"], w.page, w.offset))
                 frac = float(ops.silent_fraction(wp.value, cur,
                                                  tol=self.tol))
                 silent = frac > 0.99
@@ -331,16 +379,17 @@ class ServingDetectors:
                           else "silent_kv_store")
                 value = None
                 if client == "silent_kv_store":
-                    value = np.asarray(peek(layer, w.slot, w.pos))
-                c1 = (f"serve.kv[{layer}]", f"slot:{w.slot}",
+                    value = np.asarray(peek(layer, w.page, w.offset))
+                c1 = (f"serve.kv[{layer}]", f"page:{w.page}",
                       f"req:{w.rid or 'idle'}")
                 self.wp.on_sample(Watchpoint(
-                    address=(layer << 32) | (w.slot << 16) | w.pos,
-                    offset=w.pos, size=self.site_bytes, value=value,
+                    address=(layer << 40) | (w.page << 20) | w.offset,
+                    offset=w.offset, size=self.site_bytes, value=value,
                     context=c1,
                     trap_type="RW_TRAP" if client == "dead_kv_store"
                     else "W_TRAP",
                     meta={"client": client, "layer": layer,
+                          "page": w.page, "offset": w.offset,
                           "slot": w.slot, "pos": w.pos, "rid": w.rid,
                           "live": w.active}))
         return out

@@ -38,10 +38,12 @@ FLASH_THRESHOLD = 1024
 
 
 def attention(q, k, v, *, causal: bool = True, q_offset=0,
-              kv_len: Optional[jax.Array] = None) -> jax.Array:
+              kv_len: Optional[jax.Array] = None,
+              kv_valid: Optional[jax.Array] = None) -> jax.Array:
     """Model-facing attention entry point (GQA)."""
     sq, skv = q.shape[1], k.shape[1]
-    if kv_len is None and isinstance(q_offset, int) and q_offset == 0:
+    if (kv_len is None and kv_valid is None
+            and isinstance(q_offset, int) and q_offset == 0):
         if _use_pallas() and sq >= 8:
             return _fa.flash_attention(q, k, v, causal=causal,
                                        interpret=_pallas_interpret())
@@ -49,7 +51,14 @@ def attention(q, k, v, *, causal: bool = True, q_offset=0,
             from repro.kernels.flash_xla import flash_xla
             return flash_xla(q, k, v, causal, 0)
     return _ref.attention_ref(q, k, v, causal=causal, q_offset=q_offset,
-                              kv_len=kv_len)
+                              kv_len=kv_len, kv_valid=kv_valid)
+
+
+# paged-KV scatter/gather: pure-jnp (XLA scatter/gather fuse well and
+# GSPMD partitions them); re-exported here so model code dispatches
+# through one kernel namespace
+paged_update = _ref.paged_update
+paged_gather = _ref.paged_gather
 
 
 def flash_attention(q, k, v, *, causal: bool = True, interpret=None,

@@ -17,13 +17,17 @@ import jax.numpy as jnp
 # ----------------------------------------------------------------------
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, q_offset=0,
-                  kv_len: Optional[jax.Array] = None) -> jax.Array:
+                  kv_len: Optional[jax.Array] = None,
+                  kv_valid: Optional[jax.Array] = None) -> jax.Array:
     """q: (B,Sq,Hq,D), k/v: (B,Skv,Hkv,D) -> (B,Sq,Hq,D). f32 accumulate.
 
     ``q_offset``/``kv_len`` may be scalars (one decode position for the
     whole batch) or (B,) vectors (per-slot positions — the serving
     engine's continuous-batching cache, where every row sits at its own
-    sequence offset).
+    sequence offset). ``kv_valid`` is an optional (B,Skv) gather-validity
+    mask: positions of a paged cache's logical view whose page table
+    entry is unmapped (see ``paged_gather``) are masked out like
+    positions past ``kv_len``.
     """
     B, Sq, Hq, D = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
@@ -41,6 +45,9 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
         lmask = jnp.arange(Skv) < jnp.asarray(kv_len)[..., None]
         lmask = lmask[..., None, :]              # (1,Skv) | (B,1,Skv)
         mask = lmask if mask is None else (mask & lmask)
+    if kv_valid is not None:
+        vmask = kv_valid[:, None, :]             # (B,1,Skv)
+        mask = vmask if mask is None else (mask & vmask)
     if mask is not None:
         bmask = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
         scores = jnp.where(bmask, scores, -jnp.inf)
@@ -48,6 +55,54 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
     return out.reshape(B, Sq, Hq, D)
+
+
+# ----------------------------------------------------------------------
+# Paged KV cache: page-table scatter (store) and gather (load) between
+# the logical per-slot view and the flat page pool (serve/kv_cache.py).
+# ----------------------------------------------------------------------
+def paged_update(pool_k: jax.Array, pool_v: jax.Array, k_new: jax.Array,
+                 v_new: jax.Array, pt: jax.Array,
+                 idx: jax.Array) -> tuple:
+    """Scatter new K/V rows into a paged pool through the page table.
+
+    pool: (P, page, Hkv, D); k_new/v_new: (B, S, Hkv, D); pt: (B, M)
+    page table (-1 = unmapped); idx: (B,) per-slot write positions. Row
+    (b, s) lands at logical position idx[b]+s -> page pt[b, pos//page].
+    Stores whose position is negative (engine idle-slot sentinel) or
+    whose page is unmapped are DROPPED — idle/finished slots write
+    nothing past their page-table extent, which is exactly the dead/
+    silent-store waste of the dense layout eliminated.
+    """
+    P, ps = pool_k.shape[0], pool_k.shape[1]
+    B, S = k_new.shape[0], k_new.shape[1]
+    M = pt.shape[1]
+    pos = idx[:, None] + jnp.arange(S)[None, :]            # (B,S) logical
+    page_i = jnp.floor_divide(pos, ps)
+    page = jnp.where(
+        (page_i >= 0) & (page_i < M),
+        jnp.take_along_axis(pt, jnp.clip(page_i, 0, M - 1), axis=1), -1)
+    flat = jnp.where((page >= 0) & (pos >= 0),
+                     page * ps + jnp.remainder(pos, ps), P * ps)
+
+    def scat(pool, new):
+        fp = pool.reshape((P * ps,) + pool.shape[2:])
+        fp = fp.at[flat].set(new.astype(pool.dtype), mode="drop")
+        return fp.reshape(pool.shape)
+    return scat(pool_k, k_new), scat(pool_v, v_new)
+
+
+def paged_gather(pool: jax.Array, pt: jax.Array) -> tuple:
+    """Logical per-slot view of a paged pool: (B, M*page, ...) plus the
+    (B, M*page) validity mask (False where the page table is unmapped —
+    gathered garbage there must be masked, see attention_ref.kv_valid).
+    """
+    P, ps = pool.shape[0], pool.shape[1]
+    B, M = pt.shape
+    g = jnp.take(pool, jnp.clip(pt, 0, P - 1), axis=0)     # (B,M,page,...)
+    g = g.reshape((B, M * ps) + pool.shape[2:])
+    valid = jnp.repeat(pt >= 0, ps, axis=1)
+    return g, valid
 
 
 # ----------------------------------------------------------------------

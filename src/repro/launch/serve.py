@@ -9,6 +9,11 @@ batched prefill + per-slot decode positions + slot recycling); families
 without an indexed KV cache in every block (hybrid/ssm/vlm/audio) fall
 back to the legacy token-loop, with prefill and decode still timed
 separately.
+
+``--kv paged`` switches the engine to the block-paged KV heap
+(serve/kv_cache.py): refcounted pages + copy-on-write prefix reuse,
+eliminating exactly the waste the detectors flag in dense mode —
+idle-slot dead/silent KV stores and silent prefix loads.
 """
 from __future__ import annotations
 
@@ -22,7 +27,7 @@ import numpy as np
 from repro.configs import registry
 from repro.configs.base import ProfilerConfig
 from repro.core.detectors import ServingDetectors
-from repro.core.findings import merge_profiles
+from repro.core.findings import Finding, WasteProfile, merge_profiles
 from repro.core.hlo_waste import analyze_waste
 from repro.core.interpreter import profile_fn
 from repro.core.report import dump_json
@@ -32,13 +37,35 @@ from repro.serve.decode import make_serve_step
 from repro.serve.engine import ENGINE_FAMILIES, Request, ServeEngine
 
 
-def _run_engine(cfg, model, params, prompts, gen, seed, profile):
+def padding_waste_profile(stats) -> WasteProfile:
+    """Tier-2-style padding-waste finding from the engine's accounting:
+    `_bucket`'s power-of-two prompt padding silently burns prefill
+    compute on garbage positions (checked = all prefill positions
+    swept, flagged = the padded ones)."""
+    prof = WasteProfile(tier=2)
+    padded = int(stats.get("padded_prefill_tokens", 0))
+    useful = int(stats.get("prefill_computed_tokens", 0))
+    prof.checked["prefill_padding"] = padded + useful
+    prof.flagged["prefill_padding"] = padded
+    if padded:
+        prof.add(Finding(
+            kind="prefill_padding", tier=2,
+            c1=("serve.engine:_bucket",), c2=("serve.engine:prefill",),
+            count=int(stats.get("prefills", 0)),
+            fraction=padded / max(padded + useful, 1),
+            meta={"padded_tokens": padded, "computed_tokens": useful}))
+    return prof
+
+
+def _run_engine(cfg, model, params, prompts, gen, seed, profile,
+                kv="dense", page_size=16):
     batch, prompt_len = prompts.shape
     max_len = prompt_len + gen + 1
     det = ServingDetectors(ProfilerConfig(enabled=True, seed=seed)) \
         if profile else None
     eng = ServeEngine(model, params, num_slots=batch, max_len=max_len,
-                      detectors=det, kv_dtype=jnp.float32)
+                      detectors=det, kv_dtype=jnp.float32,
+                      kv_layout=kv, page_size=page_size)
     for b in range(batch):
         eng.submit(Request(rid=f"r{b}", tokens=np.asarray(prompts[b]),
                            max_new_tokens=gen))
@@ -49,7 +76,7 @@ def _run_engine(cfg, model, params, prompts, gen, seed, profile):
     tp = eng.throughput()
     tier3 = det.report if det is not None else None
     tier2_subject = eng.lowered_tick() if profile else None
-    return out, tp, tier3, tier2_subject
+    return out, tp, tier3, tier2_subject, eng.stats
 
 
 def _run_legacy(cfg, model, params, prompts, gen, kw):
@@ -83,7 +110,8 @@ def _run_legacy(cfg, model, params, prompts, gen, kw):
 
 def run(arch: str, *, smoke: bool = True, batch: int = 4,
         prompt_len: int = 32, gen: int = 16, seed: int = 0,
-        profile: bool = False, profile_out: str = None):
+        profile: bool = False, profile_out: str = None,
+        kv: str = "dense", page_size: int = 16):
     cfg = registry.get_config(arch)
     if smoke:
         cfg = cfg.smoke()
@@ -99,26 +127,38 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
         kw["frames"] = jnp.asarray(data["frames"])
 
     tier3 = None
+    stats = None
     if cfg.family in ENGINE_FAMILIES:
-        out, tp, tier3, tier2_subject = _run_engine(
-            cfg, model, params, prompts, gen, seed, profile)
+        out, tp, tier3, tier2_subject, stats = _run_engine(
+            cfg, model, params, prompts, gen, seed, profile,
+            kv=kv, page_size=page_size)
     else:
+        if kv != "dense":
+            raise ValueError(f"--kv paged needs the engine families "
+                             f"{ENGINE_FAMILIES}, not {cfg.family!r}")
         out, tp, _, tier2_subject = _run_legacy(
             cfg, model, params, prompts, gen, kw)
 
     # prompt tokens are NOT generated tokens: report the two rates
     # separately (a single blended tok/s overstates decode by counting
     # teacher-forced prefill pushes at the same rate)
-    print(f"[serve] {arch}: {batch} seqs, prompt {prompt_len} + gen {gen} | "
-          f"prefill {tp['prefill_tok_s']:.0f} tok/s, "
+    print(f"[serve] {arch}: {batch} seqs, prompt {prompt_len} + gen {gen} "
+          f"[kv={kv}] | prefill {tp['prefill_tok_s']:.0f} tok/s, "
           f"decode {tp['decode_tok_s']:.0f} tok/s (live slots)")
+    if stats is not None:
+        print(f"[serve] prefix hits: {stats['prefix_hits']} "
+              f"({stats['prefix_hit_tokens']} tokens served from cache), "
+              f"computed {stats['prefill_computed_tokens']} of "
+              f"{stats['prefill_tokens']} prompt tokens, "
+              f"padded waste {stats['padded_prefill_tokens']} tokens, "
+              f"pages freed {stats['pages_freed']}")
     print("[serve] sample continuation:", np.asarray(out[0])[:12])
 
     if profile:
         # one merged WasteProfile for the serving path (DESIGN.md §2):
         # Tier-3 serve detectors on the live engine, Tier-2 on the
-        # compiled decode step, Tier-1 (trace→replay) on a single-token
-        # decode microstep
+        # compiled decode step + the engine's padding accounting, Tier-1
+        # (trace→replay) on a single-token decode microstep
         tier2 = analyze_waste(tier2_subject.compile().as_text()).profile
         pc = ProfilerConfig(enabled=True, period=5000, seed=seed)
         cache1 = model.init_cache(params, batch, prompt_len + gen + 1,
@@ -128,6 +168,8 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
             lambda tok: make_serve_step(model)(params, cache1, tok)[0],
             tok1, cfg=pc, epochs=2)
         profs = [tier1, tier2] + ([tier3] if tier3 is not None else [])
+        if stats is not None:
+            profs.append(padding_waste_profile(stats))
         merged = merge_profiles(profs)
         print(merged.render(top_k=3))
         if profile_out:
@@ -146,11 +188,14 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--kv", default="dense", choices=("dense", "paged"))
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--profile", action="store_true")
     ap.add_argument("--profile-out", default=None)
     a = ap.parse_args()
     run(a.arch, smoke=a.smoke, batch=a.batch, prompt_len=a.prompt_len,
-        gen=a.gen, profile=a.profile, profile_out=a.profile_out)
+        gen=a.gen, profile=a.profile, profile_out=a.profile_out,
+        kv=a.kv, page_size=a.page_size)
 
 
 if __name__ == "__main__":

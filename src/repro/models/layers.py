@@ -52,16 +52,18 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 # ----------------------------------------------------------------------
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               causal: bool, q_offset=0,
-              kv_len: Optional[jax.Array] = None) -> jax.Array:
+              kv_len: Optional[jax.Array] = None,
+              kv_valid: Optional[jax.Array] = None) -> jax.Array:
     """q: (B,Sq,Hq,D), k/v: (B,Skv,Hkv,D) -> (B,Sq,Hq,D).
 
     GQA via head grouping; scores accumulated in f32. ``q_offset`` is the
     absolute position of q[0] (for decode); ``kv_len`` masks cache slots
-    >= kv_len (decode with preallocated cache).
+    >= kv_len (decode with preallocated cache); ``kv_valid`` masks
+    unmapped page-table positions of a paged cache's gathered view.
     """
     from repro.kernels import ops
     return ops.attention(q, k, v, causal=causal, q_offset=q_offset,
-                         kv_len=kv_len)
+                         kv_len=kv_len, kv_valid=kv_valid)
 
 
 def decl_attention(cfg: ModelConfig, cross: bool = False) -> Dict[str, Any]:
@@ -121,7 +123,41 @@ def apply_attention(p, cfg: ModelConfig, x: jax.Array, *,
 
     new_cache = None
     kv_len = None
-    if cache is not None and kv_src is None:
+    kv_valid = None
+    if cache is not None and kv_src is None and "pt" in cache:
+        # block-paged cache (serve/kv_cache.py): pool (P,page,Hkv,D),
+        # page table (B,M), per-slot positions (B,). Stores scatter
+        # through the table (out-of-table/idle writes DROP — no dead
+        # rewrites); reads gather the logical view back, masked where
+        # the table is unmapped.
+        from repro.kernels import ops
+        idx = cache["idx"]
+        pt = cache["pt"]
+        if S == 1:
+            from repro.serve.flash_decode import (
+                decode_paged_attention_sharded, paged_shard_plan)
+            from repro.sharding.ctx import current_sharder
+            sharder = current_sharder()
+            plan = paged_shard_plan(sharder, B, cache["k"].shape[0],
+                                    cache["k"].shape[1])
+            if plan is not None:
+                b_ax, s_ax = plan
+                out, ck, cv = decode_paged_attention_sharded(
+                    q, k, v, cache["k"], cache["v"], pt, idx,
+                    mesh=sharder.mesh, batch_axes=b_ax, seq_axes=s_ax)
+                new_cache = {**cache, "k": ck, "v": cv, "idx": idx + S}
+                out = out.reshape(B, S, H * D)
+                out = out @ p["wo"]["w"].astype(dt)
+                return shard(out, "btd"), new_cache
+        ck, cv = ops.paged_update(cache["k"], cache["v"], k, v, pt, idx)
+        new_cache = {**cache, "k": ck, "v": cv, "idx": idx + S}
+        k, kv_valid = ops.paged_gather(ck, pt)
+        v, _ = ops.paged_gather(cv, pt)
+        k, v = k.astype(dt), v.astype(dt)
+        kv_len = idx + S
+        q_offset = idx
+        causal = True
+    elif cache is not None and kv_src is None:
         idx = cache["idx"]
         if S == 1 and jnp.ndim(idx) == 0:
             # one-token decode: sharded flash-decoding when the cache is
@@ -164,7 +200,7 @@ def apply_attention(p, cfg: ModelConfig, x: jax.Array, *,
     k = shard(k, "bskv")
     v = shard(v, "bskv")
     out = attention(q, k, v, causal=causal and kv_src is None,
-                    q_offset=q_offset, kv_len=kv_len)
+                    q_offset=q_offset, kv_len=kv_len, kv_valid=kv_valid)
     out = out.reshape(B, S, H * D)
     out = out @ p["wo"]["w"].astype(dt)
     return shard(out, "btd"), new_cache

@@ -385,6 +385,63 @@ class LM:
             cache["main"][name] = sub
         return cache
 
+    # ------------------------- paged cache ---------------------------
+    def init_paged_cache(self, params, num_slots: int, max_len: int, *,
+                         page_size: int = 16,
+                         num_pages: Optional[int] = None,
+                         kv_dtype=jnp.bfloat16) -> Any:
+        """Block-paged decode cache (serve/kv_cache.py): per layer, one
+        flat pool of `num_pages` pages of `page_size` K/V rows shared by
+        all slots, plus a per-slot page table mapping logical positions
+        to pages (-1 = unmapped) and per-slot write indices. Families
+        whose every sub-block carries an indexed KV cache only (the
+        serving-engine families)."""
+        cfg, sch = self.cfg, self.sched
+        Hkv, D = cfg.num_kv_heads, cfg.head_dim
+        max_pages = -(-max_len // page_size)
+        if num_pages is None:
+            num_pages = num_slots * max_pages
+        main = {}
+        for i, typ in enumerate(sch.pattern):
+            if typ not in ("dense", "moe"):
+                raise ValueError(
+                    f"paged cache needs indexed KV in every sub-block; "
+                    f"{typ!r} blocks are unsupported")
+            main[f"b{i}_{typ}"] = {
+                "k": jnp.zeros((num_pages, page_size, Hkv, D), kv_dtype),
+                "v": jnp.zeros((num_pages, page_size, Hkv, D), kv_dtype),
+                "idx": jnp.zeros((num_slots,), jnp.int32),
+                "pt": jnp.full((num_slots, max_pages), -1, jnp.int32),
+            }
+        return {"main": _stack_cache(main, sch.n_super)}
+
+    @staticmethod
+    def cache_is_paged(cache) -> bool:
+        main = cache["main"]
+        layer0 = main[0] if isinstance(main, list) else main
+        return any("pt" in sub for sub in layer0.values())
+
+    def with_page_table(self, cache, pt) -> Any:
+        """Return `cache` with every paged KV sub-block's page table
+        replaced by `pt` ((num_slots, max_pages) int32, -1 = unmapped)."""
+        pt = jnp.asarray(pt, jnp.int32)
+
+        def set_in(tree, n):
+            return {name: ({**sub,
+                            "pt": jnp.broadcast_to(pt, (n,) + pt.shape)}
+                           if "pt" in sub else sub)
+                    for name, sub in tree.items()}
+
+        new = dict(cache)
+        if isinstance(cache["main"], list):      # decode_unroll layout
+            new["main"] = [
+                {name: ({**sub, "pt": pt} if "pt" in sub else sub)
+                 for name, sub in layer.items()}
+                for layer in cache["main"]]
+        else:
+            new["main"] = set_in(cache["main"], self.sched.n_super)
+        return new
+
     # ------------------------- cache index --------------------------
     def cache_index(self, cache) -> jax.Array:
         """Current write index of the decode cache: scalar, or (B,) when

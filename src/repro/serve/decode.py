@@ -1,9 +1,15 @@
-"""Serve-step factory: one-token batched decode with sharded KV cache.
+"""Serve-step factories: one-token batched decode, batched prefill and
+the continuous-batching engine's tick/prefill, all sharded-cache aware.
 
 With ``tp_serve`` the cache is sequence-chunk sharded over "model": each
 shard computes attention over its chunk and XLA decomposes the softmax
 reduction into the flash-decoding partial-max/denominator combine. Works
 for any head count and any cache length (incl. 500k).
+
+Every factory wraps the model call in ``sharding_ctx``, so
+``serve.engine.ServeEngine`` composes with distribution strategies
+instead of duplicating an unsharded decode step: the engine jits these
+factories directly (dense and paged KV layouts alike).
 """
 from __future__ import annotations
 
@@ -35,3 +41,72 @@ def make_prefill_step(model, strategy=None):
                 img=batch.get("img"), frames=batch.get("frames"))
         return logits
     return prefill_step
+
+
+# ----------------------------------------------------------------------
+# Continuous-batching engine steps (serve/engine.py jits these)
+# ----------------------------------------------------------------------
+def make_engine_tick(model, strategy=None, *, paged: bool = False):
+    """One decode tick over the whole slot batch.
+
+    Dense layout: idle slots freeze token AND write index, so every tick
+    rewrites the same K/V site with the same value — the serving-tier
+    dead/silent store the detectors trap on. Paged layout: idle slots'
+    write positions drop to a sentinel below the page-table extent, so
+    the scatter DROPS their store — the detected waste, eliminated."""
+    sharder = strategy.sharder() if strategy is not None else None
+
+    def tick(params, cache, tokens, active):
+        idx0 = model.cache_index(cache)            # (B,)
+        stepped = cache
+        if paged:
+            stepped = model.with_cache_index(
+                cache, jnp.where(active, idx0, -2))
+        with sharding_ctx(sharder):
+            logits, new_cache = model.decode_step(params, stepped, tokens)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        nxt = jnp.where(active[:, None], nxt[:, None], tokens)
+        new_cache = model.with_cache_index(
+            new_cache, jnp.where(active, idx0 + 1, idx0))
+        return nxt, new_cache
+    return tick
+
+
+def make_engine_prefill(model, strategy=None, *, paged: bool = False):
+    """Grouped admission prefill.
+
+    toks: (B,P) right-padded prompts — full prompts in dense mode, the
+    uncached suffixes (prompt minus the reused prefix) in paged mode;
+    admit: (B,) bool; start: (B,) cached-prefix lengths (all zero in
+    dense mode); lengths: (B,) full prompt lengths; prev_tokens: (B,1)
+    tokens of non-admitted rows, passed through untouched.
+
+    Dense: the whole refilled cache is tree-merged back under the admit
+    mask. Paged: stores already scatter through each slot's page table
+    (non-admitted rows get a sentinel index and write nothing), so no
+    merge pass exists — only the write indices are restored."""
+    sharder = strategy.sharder() if strategy is not None else None
+
+    def prefill(params, cache, toks, admit, start, lengths, prev_tokens):
+        B, P = toks.shape
+        idx0 = model.cache_index(cache)
+        if paged:
+            fresh = model.with_cache_index(
+                cache, jnp.where(admit, start, -(P + 1)))
+        else:
+            fresh = model.with_cache_index(cache, jnp.zeros((B,), jnp.int32))
+        with sharding_ctx(sharder):
+            logits, filled = model.prefill(params, fresh, toks)
+        if not paged:
+            def sel(n, o):
+                m = admit.reshape((1, -1) + (1,) * (n.ndim - 2))
+                return jnp.where(m, n, o)
+            filled = jax.tree_util.tree_map(sel, filled, cache)
+        merged = model.with_cache_index(
+            filled, jnp.where(admit, lengths, idx0))
+        sel_pos = jnp.clip(lengths - start - 1, 0, P - 1)
+        first = jnp.argmax(
+            logits[jnp.arange(B), sel_pos], axis=-1).astype(jnp.int32)
+        toks_out = jnp.where(admit[:, None], first[:, None], prev_tokens)
+        return toks_out, merged
+    return prefill

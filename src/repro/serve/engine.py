@@ -11,17 +11,26 @@ Production-shaped serving over a fixed-size decode batch:
     (EOS / max-new-tokens) and recycle their slot independently while
     the batch keeps stepping.
   * **Honest accounting** — prefill and decode token counts/times are
-    tracked separately, and decode throughput is measured over *live*
-    slots only (idle slots still burn compute; that is the point).
-  * **Waste detection** — the decode batch writes K/V for every slot
-    every tick whether or not it serves a request. With
-    `core.detectors.ServingDetectors` attached, idle-slot writes trap as
-    dead/silent KV stores and duplicate prompt prefixes as silent prefix
-    loads, all in the unified WasteProfile.
+    tracked separately, decode throughput is measured over *live* slots
+    only, and the padded (wasted) prefill tokens burned by power-of-two
+    prompt bucketing are counted in `stats`.
+  * **Waste detection → elimination** — in the default dense layout the
+    decode batch writes K/V for every slot every tick whether or not it
+    serves a request, and every duplicated prompt prefix is recomputed;
+    `core.detectors.ServingDetectors` traps exactly that waste. With
+    ``kv_layout="paged"`` the engine ELIMINATES it (serve/kv_cache.py):
+    the cache becomes a refcounted page pool with per-slot page tables,
+    idle/finished slots write nothing past their page-table extent
+    (Def.-1/2 stores gone), recycling frees pages instead of rewriting
+    rows, and a content-digest prefix index maps a duplicated prefix's
+    pages into the new slot (copy-on-write for partial pages) instead of
+    re-paying its K/V compute (the Def.-3 finding becomes a cache hit).
 
-The engine needs every sub-block of the architecture to carry an indexed
-KV cache, so it supports the "dense" and "moe" families; other families
-are served by the legacy token-loop in `launch/serve.py`.
+The jitted tick/prefill come from `serve.decode`'s step factories
+(sharding-context aware, so the engine composes with `tp_serve`). The
+engine needs every sub-block to carry an indexed KV cache, so it
+supports the "dense" and "moe" families; other families are served by
+the legacy token-loop in `launch/serve.py`.
 """
 from __future__ import annotations
 
@@ -35,8 +44,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.detectors import ServingDetectors, SlotWrite
+from repro.serve.decode import make_engine_prefill, make_engine_tick
+from repro.serve.kv_cache import PagedKV, PoolExhausted, make_page_copy
 
 ENGINE_FAMILIES = ("dense", "moe")
+KV_LAYOUTS = ("dense", "paged")
 
 
 @dataclass
@@ -70,21 +82,39 @@ class ServeEngine:
     def __init__(self, model, params, *, num_slots: int = 4,
                  max_len: int = 128, eos_id: Optional[int] = None,
                  detectors: Optional[ServingDetectors] = None,
-                 kv_dtype=jnp.float32):
+                 kv_dtype=jnp.float32, kv_layout: str = "dense",
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 prefix_window: int = 32, strategy=None):
         if model.cfg.family not in ENGINE_FAMILIES:
             raise ValueError(
                 f"ServeEngine needs an indexed KV cache in every block; "
                 f"family {model.cfg.family!r} is served by the legacy "
                 f"token-loop driver")
+        if kv_layout not in KV_LAYOUTS:
+            raise ValueError(f"kv_layout must be one of {KV_LAYOUTS}")
         self.model = model
         self.params = params
         self.num_slots = num_slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.detectors = detectors
+        self.kv_layout = kv_layout
+        self.paged = kv_layout == "paged"
 
-        cache = model.init_cache(params, num_slots, max_len,
-                                 kv_dtype=kv_dtype)
+        if self.paged:
+            max_pages = -(-max_len // page_size)
+            if num_pages is None:
+                num_pages = num_slots * max_pages
+            self.kv = PagedKV(num_slots, page_size, num_pages, max_pages,
+                              prefix_window=prefix_window)
+            cache = model.init_paged_cache(
+                params, num_slots, max_len, page_size=page_size,
+                num_pages=num_pages, kv_dtype=kv_dtype)
+            self._copy_fn = jax.jit(make_page_copy())
+        else:
+            self.kv = None
+            cache = model.init_cache(params, num_slots, max_len,
+                                     kv_dtype=kv_dtype)
         self.cache = model.with_cache_index(
             cache, jnp.zeros((num_slots,), jnp.int32))
         self.tokens = jnp.zeros((num_slots, 1), jnp.int32)
@@ -96,10 +126,20 @@ class ServeEngine:
         self.step_no = 0
         self.stats = {"prefill_tokens": 0, "decode_tokens": 0,
                       "prefill_s": 0.0, "decode_s": 0.0, "ticks": 0,
-                      "prefills": 0}
+                      "prefills": 0,
+                      # prompt tokens actually pushed through the model
+                      # (< prefill_tokens when prefixes hit the cache)
+                      "prefill_computed_tokens": 0,
+                      # padded-garbage positions the bucketed prefill
+                      # burned (whole-batch sweep minus useful suffixes)
+                      "padded_prefill_tokens": 0,
+                      "prefix_hits": 0, "prefix_hit_tokens": 0,
+                      "cow_copies": 0, "pages_freed": 0}
 
-        self._tick_fn = jax.jit(self._make_tick())
-        self._prefill_fn = jax.jit(self._make_prefill())
+        self._tick_fn = jax.jit(
+            make_engine_tick(model, strategy, paged=self.paged))
+        self._prefill_fn = jax.jit(
+            make_engine_prefill(model, strategy, paged=self.paged))
 
         # detector geometry: the KV sub-blocks of one scanned superblock
         main = self.cache["main"]
@@ -109,62 +149,27 @@ class ServeEngine:
                 2 * int(np.prod(main[n]["k"].shape[3:]))
                 * main[n]["k"].dtype.itemsize
                 for n in self._kv_names)
-            detectors.bind(num_layers=model.sched.n_super, site_bytes=site)
+            detectors.bind(num_layers=model.sched.n_super, site_bytes=site,
+                           paged=self.paged)
             self._peek_fn = jax.jit(self._make_peek())
 
     # ---------------------------- jitted steps ------------------------
-    def _make_tick(self):
-        model = self.model
-
-        def tick(params, cache, tokens, active):
-            idx0 = model.cache_index(cache)            # (B,)
-            logits, new_cache = model.decode_step(params, cache, tokens)
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            nxt = jnp.where(active[:, None], nxt[:, None], tokens)
-            # idle slots freeze token AND write index: every tick rewrites
-            # the same K/V site with the same value — the serving-tier
-            # dead/silent store the detectors trap on
-            new_cache = model.with_cache_index(
-                new_cache, jnp.where(active, idx0 + 1, idx0))
-            return nxt, new_cache
-        return tick
-
-    def _make_prefill(self):
-        model = self.model
-
-        def prefill(params, cache, toks, admit, lengths, prev_tokens):
-            B = toks.shape[0]
-            idx0 = model.cache_index(cache)
-            fresh = model.with_cache_index(
-                cache, jnp.zeros((B,), jnp.int32))
-            logits, filled = model.prefill(params, fresh, toks)
-
-            def sel(n, o):
-                m = admit.reshape((1, -1) + (1,) * (n.ndim - 2))
-                return jnp.where(m, n, o)
-            merged = jax.tree_util.tree_map(sel, filled, cache)
-            merged = model.with_cache_index(
-                merged, jnp.where(admit, lengths, idx0))
-            first = jnp.argmax(
-                logits[jnp.arange(B), lengths - 1], axis=-1).astype(jnp.int32)
-            toks_out = jnp.where(admit[:, None], first[:, None], prev_tokens)
-            return toks_out, merged
-        return prefill
-
     def _make_peek(self):
         names = self._kv_names
 
-        def peek(cache, layer, slot, pos):
+        def peek(cache, layer, page, off):
+            # dense layout: (L, B, S, Hkv, D) — page is the slot row;
+            # paged layout: (L, P, page_size, Hkv, D) — the pool page.
             outs = []
             for name in names:
                 sub = cache["main"][name]
-                outs.append(sub["k"][layer, slot, pos].reshape(-1))
-                outs.append(sub["v"][layer, slot, pos].reshape(-1))
+                outs.append(sub["k"][layer, page, off].reshape(-1))
+                outs.append(sub["v"][layer, page, off].reshape(-1))
             return jnp.concatenate(outs).astype(jnp.float32)
         return peek
 
-    def _peek(self, layer: int, slot: int, pos: int) -> np.ndarray:
-        return np.asarray(self._peek_fn(self.cache, layer, slot, pos))
+    def _peek(self, layer: int, page: int, off: int) -> np.ndarray:
+        return np.asarray(self._peek_fn(self.cache, layer, page, off))
 
     # ------------------------------ schedule ---------------------------
     def submit(self, req: Request) -> None:
@@ -177,6 +182,13 @@ class ServeEngine:
     def pending(self) -> int:
         return len(self._queue) + sum(r is not None for r in self.slots)
 
+    def _note_freed(self, freed: List[int]) -> None:
+        """Every page-freeing path goes through here: count the frees
+        AND disarm the detectors' now-stale traps on them."""
+        self.stats["pages_freed"] += len(freed)
+        if self.detectors is not None and freed:
+            self.detectors.on_page_free(freed)
+
     def _accept_token(self, slot: int, req: Request, tok: int) -> None:
         req.generated.append(int(tok))
         limit = min(req.max_new_tokens,
@@ -186,6 +198,15 @@ class ServeEngine:
             req.finish_step = self.step_no
             self.finished[req.rid] = req
             self.slots[slot] = None        # recycle: slot idles until reuse
+            if self.paged:
+                # recycling frees pages instead of leaving rows to be
+                # silently rewritten; prefix-index pins keep shared
+                # pages. The device page table is synced lazily at the
+                # next _admit: a finished slot's writes are already
+                # dropped by the idle index sentinel, and freed pages
+                # are only re-mapped by an admission (which pushes the
+                # fresh table before its prefill).
+                self._note_freed(self.kv.free_slot(slot))
             if self.detectors is not None:
                 self.detectors.on_finish(self.step_no, slot, req.rid)
 
@@ -198,38 +219,95 @@ class ServeEngine:
         if not group:
             return
         B = self.num_slots
-        # power-of-two padding for a bounded jit cache, capped at the
-        # cache extent (prompts are < max_len by submit's contract)
-        P = min(_bucket(max(r.tokens.size for r in group)), self.max_len)
-        toks = np.zeros((B, P), np.int32)
         admit = np.zeros(B, bool)
+        starts = np.zeros(B, np.int32)
         lengths = np.ones(B, np.int32)
-        taken = free[:len(group)]
-        for b, req in zip(taken, group):
+        taken: List[int] = []
+        plans: Dict[int, Any] = {}
+        admitted: List[Request] = []
+        for b, req in zip(free, group):
             L = req.tokens.size
-            toks[b, :L] = req.tokens
+            if self.paged:
+                budget = min(req.max_new_tokens, self.max_len - L)
+                try:
+                    plan = self.kv.admit(b, req.tokens, budget)
+                except PoolExhausted as e:
+                    # pool pressure: defer this (and following) requests;
+                    # pages the failed eviction pass DID free still need
+                    # their stale traps disarmed
+                    self._note_freed(e.freed)
+                    self._queue.extendleft(
+                        reversed(group[len(admitted):]))
+                    break
+                plans[b] = plan
+                starts[b] = plan.reuse_len
+                if plan.reuse_len:
+                    self.stats["prefix_hits"] += 1
+                    self.stats["prefix_hit_tokens"] += plan.reuse_len
+                self.stats["cow_copies"] += len(plan.cow)
+                self._note_freed(plan.freed)
             admit[b] = True
             lengths[b] = L
-            if self.detectors is not None:
-                # the prefill store sweeps the full padded extent [0, P)
-                self.detectors.on_admit(self.step_no, b, req.rid,
-                                        req.tokens, padded_len=P)
+            taken.append(b)
+            admitted.append(req)
             self.slots[b] = req
             self._lengths[b] = L
             req.prefill_step = self.step_no
+        if not admitted:
+            return
+
+        # power-of-two padding of the group's (suffix) lengths for a
+        # bounded jit cache, capped at the cache extent
+        suffixes = [int(lengths[b] - starts[b]) for b in taken]
+        P = min(_bucket(max(suffixes)), self.max_len)
+        toks = np.zeros((B, P), np.int32)
+        for b, req in zip(taken, admitted):
+            suf = req.tokens[int(starts[b]):]
+            toks[b, :suf.size] = suf
+            if self.detectors is not None:
+                # dense: the prefill store sweeps the padded extent [0,P)
+                # of the slot's row; paged: only freshly-owned pages are
+                # written, so there is no stale-row sweep to trap
+                self.detectors.on_admit(
+                    self.step_no, b, req.rid, req.tokens,
+                    padded_len=None if self.paged else P,
+                    reuse_len=int(starts[b]))
+
+        if self.paged:
+            self.cache = self.model.with_page_table(self.cache, self.kv.pt)
+            cows = [c for b in taken for c in plans[b].cow]
+            if cows:
+                # copy-on-write of partially reused pages, padded to the
+                # slot count so one compiled shape serves every group
+                src = np.full(B, 0, np.int32)
+                dst = np.full(B, self.kv.num_pages, np.int32)  # dropped
+                for i, (s, d) in enumerate(cows):
+                    src[i], dst[i] = s, d
+                self.cache = self._copy_fn(self.cache, jnp.asarray(src),
+                                           jnp.asarray(dst))
+            # the copy consumed the COW sources (value semantics: this
+            # cache already holds the copied rows) — drop their pins
+            for b in taken:
+                self._note_freed(self.kv.release(plans[b].cow_pins))
 
         t0 = time.perf_counter()
         toks_out, self.cache = self._prefill_fn(
             self.params, self.cache, jnp.asarray(toks),
-            jnp.asarray(admit), jnp.asarray(lengths), self.tokens)
+            jnp.asarray(admit), jnp.asarray(starts), jnp.asarray(lengths),
+            self.tokens)
         toks_out.block_until_ready()
         self.stats["prefill_s"] += time.perf_counter() - t0
         self.stats["prefill_tokens"] += int(sum(r.tokens.size
-                                                for r in group))
+                                                for r in admitted))
+        self.stats["prefill_computed_tokens"] += int(sum(suffixes))
+        self.stats["padded_prefill_tokens"] += B * P - int(sum(suffixes))
         self.stats["prefills"] += 1
         self.tokens = toks_out
+        if self.paged:
+            for b, req in zip(taken, admitted):
+                self._note_freed(self.kv.register_prefix(b, req.tokens))
         host = np.asarray(toks_out)[:, 0]
-        for b, req in zip(taken, group):
+        for b, req in zip(taken, admitted):
             self._accept_token(b, req, host[b])
 
     def _decode_tick(self) -> None:
@@ -250,9 +328,24 @@ class ServeEngine:
             if req is not None:
                 self._accept_token(b, req, host[b])
         if self.detectors is not None:
-            writes = [SlotWrite(b, req.rid if req is not None else None,
-                                req is not None, int(write_pos[b]))
-                      for b, req in enumerate(slots_now)]
+            writes = []
+            for b, req in enumerate(slots_now):
+                pos = int(write_pos[b])
+                if self.paged:
+                    # idle slots write NOTHING in the paged layout — the
+                    # scatter dropped their store, so there is no event;
+                    # a slot that just finished freed its pages (site
+                    # lookup comes back unmapped) and is skipped too
+                    if req is None:
+                        continue
+                    page, off = self.kv.site(b, pos)
+                    if page < 0:
+                        continue
+                else:
+                    page, off = b, pos
+                writes.append(SlotWrite(b, req.rid if req is not None
+                                        else None, req is not None, pos,
+                                        page=page, offset=off))
             self.detectors.on_step(self.step_no, writes, self._peek)
 
     def step(self) -> None:

@@ -90,6 +90,93 @@ def decode_attention_sharded(q, k_new, v_new, ck, cv, idx, *, mesh,
     return fn(q, k_new, v_new, ck, cv, idx)
 
 
+def decode_paged_attention_sharded(q, k_new, v_new, ck, cv, pt, idx, *,
+                                   mesh, batch_axes: Tuple[str, ...],
+                                   seq_axes: Tuple[str, ...]):
+    """Flash-decoding over a block-paged KV pool (serve/kv_cache.py).
+
+    q: (B,1,Hq,D); k_new/v_new: (B,1,Hkv,D); ck/cv: (P,page,Hkv,D) page
+    pool sharded in page chunks over `seq_axes`; pt: (B,M) page table
+    (-1 = unmapped); idx: (B,) per-slot write positions (negative =
+    idle, store dropped). Each shard scatters the one new row it owns
+    through the page table, gathers its locally-owned pages into the
+    logical per-slot view under a page-table-aware ownership mask, and
+    the partials combine with the same pmax+psum flash reduction as the
+    dense path. Returns (out (B,1,Hq,D), new_ck, new_cv)."""
+    P, ps = ck.shape[0], ck.shape[1]
+    Hq, D = q.shape[2], q.shape[3]
+    Hkv = ck.shape[2]
+    G = Hq // Hkv
+    M = pt.shape[1]
+    n_seq = int(np.prod([mesh.shape[a] for a in seq_axes]))
+    chunk = P // n_seq                 # pages per shard
+    scale = 1.0 / np.sqrt(D)
+
+    b = batch_axes if batch_axes else None
+    q_spec = PS(b, None, None, None)
+    pool_spec = PS(seq_axes, None, None, None)
+    pt_spec = PS(b, None)
+    idx_spec = PS(b)
+
+    def local(q_l, kn, vn, ck_l, cv_l, pt_l, idx_l):
+        f32 = jnp.float32
+        off = _axis_index(seq_axes, mesh) * chunk
+        # -- store: route the new row through the page table; only the
+        # shard owning the target page writes (others — and idle slots
+        # with negative positions or unmapped pages — drop)
+        pi = jnp.floor_divide(idx_l, ps)
+        page = jnp.where(
+            (pi >= 0) & (pi < M),
+            jnp.take_along_axis(pt_l, jnp.clip(pi, 0, M - 1)[:, None],
+                                axis=1)[:, 0], -1)
+        lp = page - off
+        own_w = (page >= 0) & (lp >= 0) & (lp < chunk) & (idx_l >= 0)
+        flat = jnp.where(own_w, lp * ps + jnp.remainder(idx_l, ps),
+                         chunk * ps)
+
+        def scat(pool, new):
+            fp = pool.reshape((chunk * ps,) + pool.shape[2:])
+            fp = fp.at[flat].set(new[:, 0].astype(pool.dtype), mode="drop")
+            return fp.reshape(pool.shape)
+        ck_n = scat(ck_l, kn)
+        cv_n = scat(cv_l, vn)
+
+        # -- gather: the slot's logical view from locally-owned pages
+        lpt = pt_l - off                              # (B', M)
+        owned = (pt_l >= 0) & (lpt >= 0) & (lpt < chunk)
+        kg = jnp.take(ck_n, jnp.clip(lpt, 0, chunk - 1), axis=0)
+        vg = jnp.take(cv_n, jnp.clip(lpt, 0, chunk - 1), axis=0)
+        Bl = pt_l.shape[0]
+        kg = kg.reshape(Bl, M * ps, Hkv, D)
+        vg = vg.reshape(Bl, M * ps, Hkv, D)
+        pos = jnp.arange(M * ps)
+        valid = (jnp.repeat(owned, ps, axis=1)
+                 & (pos[None, :] <= idx_l[:, None]))  # incl. the new token
+
+        # -- local partial attention + flash-decoding combine
+        qg = q_l.reshape(Bl, Hkv, G, D)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qg, kg.astype(q_l.dtype),
+                       preferred_element_type=f32) * scale
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+        m = jnp.max(s, axis=-1)
+        p = jnp.exp(s - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bhgk,bkhd->bhgd", p, vg.astype(q_l.dtype),
+                       preferred_element_type=f32)
+        gm = jax.lax.pmax(m, seq_axes)
+        corr = jnp.exp(m - gm)
+        l = jax.lax.psum(l * corr, seq_axes)
+        o = jax.lax.psum(o * corr[..., None], seq_axes)
+        out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q_l.dtype)
+        return out.reshape(Bl, 1, Hq, D), ck_n, cv_n
+
+    fn = shard_map(local, mesh,
+                   (q_spec, q_spec, q_spec, pool_spec, pool_spec,
+                    pt_spec, idx_spec),
+                   (q_spec, pool_spec, pool_spec))
+    return fn(q, k_new, v_new, ck, cv, pt, idx)
+
+
 def cross_attention_sharded(q, ck, cv, *, mesh, batch_axes, seq_axes):
     """Read-only sharded cross-attention (precomputed KV, e.g. encoder out
     or image tokens). Same combine, no update."""
@@ -123,6 +210,20 @@ def cross_attention_sharded(q, ck, cv, *, mesh, batch_axes, seq_axes):
 
     fn = shard_map(local, mesh, (q_spec, c_spec, c_spec), q_spec)
     return fn(q, ck, cv)
+
+
+def paged_shard_plan(sharder, batch: int, num_pages: int, page_size: int):
+    """Shard plan for a paged pool: pages chunk over 'model' (the dense
+    plan's sequence role); batch over dp when divisible. None = run the
+    single-device gather/scatter fallback."""
+    if sharder is None or "model" not in sharder.mesh.shape:
+        return None
+    mesh = sharder.mesh
+    if num_pages * page_size < 1024 or num_pages % mesh.shape["model"]:
+        return None
+    dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    dpn = int(np.prod([mesh.shape[a] for a in dp]))
+    return (dp if batch % dpn == 0 else ()), ("model",)
 
 
 def decode_shard_plan(sharder, batch: int, seq: int):

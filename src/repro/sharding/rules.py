@@ -233,6 +233,30 @@ class TpServe(Strategy):
             return PS(*spec)
         return jax.tree_util.tree_map(leaf, cache_abstract)
 
+    def paged_cache_specs(self, cache_abstract, batch: int) -> Any:
+        """Paged-pool analogue of cache_specs: the page dimension of each
+        (L, P, page, Hkv, D) pool chunks over 'model' (pages play the
+        dense layout's sequence-shard role — serve/flash_decode.py's
+        paged combine), page tables/indices shard over dp with the slot
+        batch when divisible."""
+        mesh = self.mesh
+        dp = self.dp
+        dpn = int(np.prod([mesh.shape[a] for a in dp]))
+        batch_ok = batch % dpn == 0
+
+        def leaf(x):
+            shape = x.shape
+            if len(shape) == 5:            # stacked pool (L,P,page,Hkv,D)
+                pages, ps = shape[1], shape[2]
+                if pages * ps >= 1024 and pages % mesh.shape["model"] == 0:
+                    return PS(None, "model", None, None, None)
+                return PS()
+            if len(shape) >= 2 and shape[1] == batch:   # (L,B[,M]) pt/idx
+                return PS(None, dp if batch_ok else None,
+                          *([None] * (len(shape) - 2)))
+            return PS()
+        return jax.tree_util.tree_map(leaf, cache_abstract)
+
     def act_specs(self):
         dp = self.dp
         return {

@@ -1,0 +1,303 @@
+"""Paged KV cache: allocator/refcount/COW property tests over random
+admit/decode/finish/recycle schedules, prefix-index reuse semantics, and
+dense-vs-paged engine equivalence (bit-identical greedy outputs with
+fewer computed prefill tokens)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypo import given, settings, st
+
+from repro.configs import registry
+from repro.models.zoo import build_model
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.kv_cache import (PageAllocator, PagedKV, PoolExhausted,
+                                  PrefixIndex, prefix_candidates)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ----------------------------------------------------------------------
+# Allocator + prefix-index invariants under random schedules
+# ----------------------------------------------------------------------
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_paged_kv_invariants_under_random_schedule(seed):
+    """Random admit/decode/finish sequences: refcounts always equal the
+    number of holders (slot tables + index pins), the free list and
+    refcounts partition the pool (no leak, no double-free), and shared
+    pages are never mapped writable by two slots (COW isolation: a
+    partially reused page is copied, so every slot's writable tail —
+    pages past its full-page shared prefix — is exclusively owned)."""
+    rng = np.random.RandomState(seed)
+    ps, slots, max_len = 4, 3, 32
+    M = max_len // ps
+    kv = PagedKV(slots, ps, slots * M, M, prefix_window=4)
+    live = {}                                  # slot -> (tokens, shared_n)
+    pool = [rng.randint(0, 50, size=rng.randint(2, max_len // 2))
+            .astype(np.int32) for _ in range(5)]
+    for _ in range(60):
+        op = rng.randint(3)
+        free = [b for b in range(slots) if b not in live]
+        if op == 0 and free:                   # admit (maybe shared prefix)
+            b = int(rng.choice(free))
+            base = pool[rng.randint(len(pool))]
+            toks = np.concatenate(
+                [base, rng.randint(0, 50, size=rng.randint(1, 8))
+                 .astype(np.int32)])[:max_len - 1]
+            budget = int(rng.randint(1, 8))
+            plan = kv.admit(b, toks, budget)
+            kv.release(plan.cow_pins)      # the engine's post-copy step
+            assert 0 <= plan.reuse_len < toks.size
+            assert len(set(plan.row)) == len(plan.row)   # no double map
+            # COW isolation: beyond the whole-page shared prefix every
+            # page in the row is exclusively this slot's to write
+            n_full = plan.reuse_len // ps
+            owned = plan.row[n_full:]
+            for other, (otoks, o_full) in live.items():
+                orow = [p for p in kv.pt[other] if p >= 0]
+                writable_other = orow[o_full:]
+                assert not set(owned) & set(writable_other)
+            kv.register_prefix(b, toks)
+            live[b] = (toks, n_full)
+        elif op == 1 and live:                 # finish/recycle
+            b = int(rng.choice(list(live)))
+            freed = kv.free_slot(b)
+            assert len(set(freed)) == len(freed)
+            del live[b]
+        elif op == 2 and live:                 # decode positions advance;
+            pass                               # pages were pre-allocated
+        kv.check()                             # the cross-structure audit
+    for b in list(live):
+        kv.free_slot(b)
+    kv.index.clear()
+    kv.check()
+    assert kv.alloc.free_count == kv.alloc.num_pages   # no leak
+
+
+def test_allocator_rejects_double_free_and_overcommit():
+    a = PageAllocator(4)
+    pages = a.alloc(4)
+    with pytest.raises(PoolExhausted):
+        a.alloc(1)
+    a.decref(pages[:1])
+    with pytest.raises(AssertionError):
+        a.decref(pages[:1])                    # double free
+    a.incref(pages[1:2])
+    assert a.decref(pages[1:2]) == []          # still held once
+    assert a.decref(pages[1:2]) == [pages[1]]  # now freed
+
+
+def test_prefix_index_pins_and_evicts():
+    """Index entries pin pages past the donor slot's lifetime; LRU
+    eviction (window pressure) releases them back to the pool."""
+    ps = 4
+    kv = PagedKV(num_slots=2, page_size=ps, num_pages=8,
+                 max_pages_per_slot=4, prefix_window=2)
+    toks = np.arange(10, dtype=np.int32)
+    kv.admit(0, toks, budget=2)
+    kv.register_prefix(0, toks)
+    used_before = kv.alloc.used_count
+    freed = kv.free_slot(0)
+    # prefix pins survive the slot: not every page returned
+    assert kv.alloc.used_count > 0
+    assert len(freed) < used_before
+    # a duplicate prompt is served from the pinned pages
+    plan = kv.admit(1, toks.copy(), budget=2)
+    kv.release(plan.cow_pins)
+    assert plan.reuse_len == toks.size - 1
+    kv.free_slot(1)
+    kv.index.clear()
+    kv.check()
+    assert kv.alloc.free_count == 8
+
+
+def test_admit_under_pressure_never_double_maps_matched_pages():
+    """Pool pressure evicts prefix entries mid-admission; the matched
+    donor's pages are pinned before eviction/alloc, so the allocator
+    must never hand them back as fresh pages (double mapping would let
+    the COW copy clobber the shared prefix). With a second, unmatched
+    dead donor supplying freeable pages, the admission succeeds, keeps
+    the matched entries (freeing-first eviction) and the row is clean."""
+    ps = 4
+    kv = PagedKV(num_slots=3, page_size=ps, num_pages=10,
+                 max_pages_per_slot=5, prefix_window=8)
+    donor = np.arange(8, dtype=np.int32)
+    kv.admit(0, donor, budget=1)               # 3 pages (8 tok + budget)
+    kv.register_prefix(0, donor)
+    kv.free_slot(0)                            # prefix survives via pins
+    other = np.arange(200, 208, dtype=np.int32)
+    kv.admit(0, other, budget=1)               # dead unmatched donor
+    kv.register_prefix(0, other)
+    kv.free_slot(0)
+    kv.admit(1, np.arange(100, 117, dtype=np.int32), budget=3)  # hog
+    # duplicate of donor under pressure: eviction must target the dead
+    # unmatched donor's refcount-1 pins, not the just-matched pages
+    plan = kv.admit(2, donor.copy(), budget=8)
+    assert plan.reuse_len == 7
+    assert len(set(plan.row)) == len(plan.row), plan
+    shared = plan.row[:plan.reuse_len // ps]
+    for src, dst in plan.cow:
+        assert dst not in shared and src != dst
+        assert src not in plan.row             # source stays donor-owned
+    kv.release(plan.cow_pins)
+    kv.check()
+
+
+def test_admit_pressure_on_matched_pages_defers_instead_of_corrupting():
+    """The reviewer repro: the ONLY evictable pins are the matched
+    donor's own pages. Pre-pin makes those pages unavailable, so the
+    admission must defer (PoolExhausted) with consistent state — never
+    double-map."""
+    kv = PagedKV(num_slots=3, page_size=4, num_pages=8,
+                 max_pages_per_slot=5, prefix_window=8)
+    donor = np.arange(8, dtype=np.int32)
+    kv.admit(0, donor, budget=1)
+    kv.register_prefix(0, donor)
+    kv.free_slot(0)
+    kv.admit(1, np.arange(100, 117, dtype=np.int32), budget=3)  # 5 pages
+    with pytest.raises(PoolExhausted) as ei:
+        kv.admit(2, donor.copy(), budget=8)
+    # the unwound pins freed the donor pages; they are reported
+    assert len(ei.value.freed) >= 2
+    kv.check()
+
+
+def test_pool_exhausted_reports_pages_freed_by_partial_eviction():
+    """A failed admission still reports the pages its eviction pass
+    freed, so the engine can disarm their stale watchpoints."""
+    ps = 4
+    kv = PagedKV(num_slots=2, page_size=ps, num_pages=4,
+                 max_pages_per_slot=4, prefix_window=8)
+    toks = np.arange(6, dtype=np.int32)
+    kv.admit(0, toks, budget=1)                # 2 pages
+    kv.register_prefix(0, toks)
+    kv.free_slot(0)                            # both pages stay pinned
+    kv.admit(1, np.arange(50, 57, dtype=np.int32), budget=1)  # 2 fresh
+    with pytest.raises(PoolExhausted) as ei:
+        kv.admit(0, np.arange(80, 94, dtype=np.int32), budget=2)  # 4 pages
+    assert len(ei.value.freed) > 0             # eviction freed the pins
+    kv.check()
+
+
+def test_admit_rejects_request_larger_than_pool():
+    """A request whose page need exceeds the whole pool can never be
+    satisfied by waiting — it must fail loudly, not requeue forever."""
+    kv = PagedKV(num_slots=2, page_size=16, num_pages=2,
+                 max_pages_per_slot=8, prefix_window=4)
+    with pytest.raises(ValueError):
+        kv.admit(0, np.arange(40, dtype=np.int32), budget=16)
+
+
+def test_prefix_candidates_cover_pow2_and_page_boundaries():
+    assert prefix_candidates(24, 16) == [8, 16, 24]
+    assert prefix_candidates(7, 4) == [4, 7]
+    assert 32 in prefix_candidates(40, 16)     # pow2 AND boundary overlap
+
+
+def test_admit_exhaustion_raises_after_full_eviction():
+    kv = PagedKV(num_slots=2, page_size=4, num_pages=2,
+                 max_pages_per_slot=2, prefix_window=4)
+    kv.admit(0, np.arange(6, dtype=np.int32), budget=1)
+    with pytest.raises(PoolExhausted):
+        kv.admit(1, np.arange(6, dtype=np.int32) + 50, budget=1)
+
+
+# ----------------------------------------------------------------------
+# Dense vs paged: the optimization must not change a single token
+# ----------------------------------------------------------------------
+def _model():
+    cfg = dataclasses.replace(registry.get_config("qwen3-1.7b").smoke(),
+                              dtype="float32")
+    model = build_model(cfg)
+    return cfg, model, model.init(KEY)
+
+
+def _duplicated_prefix_requests(cfg, n=5, prompt_len=24):
+    """The serve_decode.py workload shape: staggered arrivals, every
+    other request sharing a prompt prefix, varying budgets."""
+    rng = np.random.RandomState(1)
+    shared = rng.randint(0, cfg.vocab_size, size=prompt_len // 2)
+    reqs = []
+    for i in range(n):
+        if i % 2 == 0:
+            tail = rng.randint(0, cfg.vocab_size, size=prompt_len // 2)
+            toks = np.concatenate([shared, tail])
+        else:
+            toks = rng.randint(0, cfg.vocab_size, size=prompt_len)
+        reqs.append(Request(rid=f"r{i}", tokens=toks.astype(np.int32),
+                            max_new_tokens=6 - (i % 3), arrival=i))
+    return reqs
+
+
+def test_dense_vs_paged_greedy_bit_identical():
+    """Same staggered duplicated-prefix workload through both KV
+    layouts: every request's greedy continuation must match token for
+    token, while paged mode serves prefix tokens from cache (fewer
+    computed prefill tokens) and frees pages at recycle."""
+    cfg, model, params = _model()
+    outs, stats = {}, {}
+    for kvl in ("dense", "paged"):
+        eng = ServeEngine(model, params, num_slots=3, max_len=40,
+                          kv_layout=kvl, page_size=16)
+        for r in _duplicated_prefix_requests(cfg):
+            eng.submit(Request(rid=r.rid, tokens=r.tokens.copy(),
+                               max_new_tokens=r.max_new_tokens,
+                               arrival=r.arrival))
+        fin = eng.run(max_steps=300)
+        outs[kvl] = {rid: fin[rid].generated for rid in fin}
+        stats[kvl] = dict(eng.stats)
+    assert sorted(outs["dense"]) == sorted(outs["paged"])
+    for rid in outs["dense"]:
+        assert outs["dense"][rid] == outs["paged"][rid], rid
+    # the detected Def.-3 waste became cache hits: fewer computed tokens
+    assert stats["paged"]["prefix_hits"] >= 1
+    assert stats["paged"]["prefix_hit_tokens"] > 0
+    assert (stats["paged"]["prefill_computed_tokens"]
+            < stats["dense"]["prefill_computed_tokens"])
+    # served-prompt accounting is layout-independent
+    assert (stats["paged"]["prefill_tokens"]
+            == stats["dense"]["prefill_tokens"])
+    # recycling frees pages instead of leaving rows to rewrite
+    assert stats["paged"]["pages_freed"] > 0
+    assert stats["dense"]["pages_freed"] == 0
+
+
+def test_paged_full_prompt_duplicate_recomputes_one_position():
+    """A fully duplicated prompt reuses everything but the last position
+    (its logits seed the continuation) and still matches dense output."""
+    cfg, model, params = _model()
+    rng = np.random.RandomState(3)
+    # 10 tokens over 4-token pages: the reused [0, 9) prefix ends
+    # mid-page, so admission must COW the partial page
+    toks = rng.randint(0, cfg.vocab_size, size=10).astype(np.int32)
+    outs = {}
+    for kvl in ("dense", "paged"):
+        eng = ServeEngine(model, params, num_slots=1, max_len=24,
+                          kv_layout=kvl, page_size=4)
+        eng.submit(Request(rid="a", tokens=toks, max_new_tokens=3))
+        eng.submit(Request(rid="b", tokens=toks.copy(), max_new_tokens=3))
+        fin = eng.run(max_steps=100)
+        outs[kvl] = (fin["a"].generated, fin["b"].generated)
+        if kvl == "paged":
+            assert eng.stats["prefix_hit_tokens"] == toks.size - 1
+            assert eng.stats["cow_copies"] >= 1     # partial page COW'd
+    assert outs["dense"] == outs["paged"]
+    # duplicate prompt => identical continuation for both requests
+    assert outs["paged"][0] == outs["paged"][1]
+
+
+def test_paged_engine_padding_waste_accounting():
+    """`_bucket` padding burn is counted: whole-batch sweep minus useful
+    suffix tokens, in both layouts."""
+    cfg, model, params = _model()
+    eng = ServeEngine(model, params, num_slots=2, max_len=32)
+    rng = np.random.RandomState(5)
+    eng.submit(Request(rid="a", tokens=rng.randint(
+        0, cfg.vocab_size, size=5).astype(np.int32), max_new_tokens=2))
+    eng.run(max_steps=50)
+    # one admission: 2 slots x bucket(5)=8 padded positions, 5 useful
+    assert eng.stats["prefill_computed_tokens"] == 5
+    assert eng.stats["padded_prefill_tokens"] == 2 * 8 - 5

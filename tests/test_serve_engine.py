@@ -211,6 +211,81 @@ def test_engine_detectors_flag_injected_kv_waste():
     assert any(any("serve.engine" in c for c in f.c2) for f in dead)
 
 
+def test_paged_mode_eliminates_detected_kv_waste():
+    """The closed detect→optimize loop (ISSUE 3 acceptance): on the
+    duplicated-prefix workload the dense layout's detectors flag silent
+    prefix loads and dead/silent KV stores; the paged layout turns the
+    prefixes into cache hits and drops idle/finished-slot writes, so the
+    same detectors must report strictly lower waste fractions — while
+    greedy outputs stay identical (covered in test_kv_cache)."""
+    cfg, model, params = _model()
+    rng = np.random.RandomState(7)
+    shared = rng.randint(0, cfg.vocab_size, size=12).astype(np.int32)
+
+    def run(kvl):
+        det = ServingDetectors(ProfilerConfig(enabled=True,
+                                              num_watchpoints=8, seed=0),
+                               sites_per_step=4)
+        eng = ServeEngine(model, params, num_slots=2, max_len=48,
+                          detectors=det, kv_layout=kvl, page_size=16)
+        # three requests sharing a 12-token prefix, staggered so each
+        # admission can reuse the previous prefill's pages; w0 finishes
+        # early and its slot idles while w1 keeps the batch decoding
+        for i, (gen, arr) in enumerate([(2, 0), (20, 2), (4, 4)]):
+            tail = rng.randint(0, cfg.vocab_size, size=8).astype(np.int32)
+            eng.submit(Request(rid=f"w{i}",
+                               tokens=np.concatenate([shared, tail]),
+                               max_new_tokens=gen, arrival=arr))
+        eng.run(max_steps=200)
+        return det.report.fractions(), eng.stats
+
+    rng_state = rng.get_state()
+    fr_dense, st_dense = run("dense")
+    rng.set_state(rng_state)               # identical prompt tails
+    fr_paged, st_paged = run("paged")
+
+    # dense flags the waste...
+    assert fr_dense["silent_prefix_load"] > 0
+    assert fr_dense.get("dead_kv_store", 0) > 0
+    # ...paged eliminates it: strictly lower where dense flagged, and
+    # never higher anywhere
+    assert (fr_paged.get("silent_prefix_load", 0.0)
+            < fr_dense["silent_prefix_load"]), (fr_dense, fr_paged)
+    assert (fr_paged.get("dead_kv_store", 0.0)
+            < fr_dense["dead_kv_store"]), (fr_dense, fr_paged)
+    assert (fr_paged.get("silent_kv_store", 0.0)
+            <= fr_dense.get("silent_kv_store", 0.0)), (fr_dense, fr_paged)
+    # the eliminated Def.-3 waste shows up as prefix-cache hits instead
+    assert st_paged["prefix_hits"] >= 1
+    assert st_dense["prefix_hits"] == 0
+    assert (st_paged["prefill_computed_tokens"]
+            < st_dense["prefill_computed_tokens"])
+
+
+def test_paged_detector_traps_survive_page_free():
+    """Stale traps disarm on page free (the substrate's out-of-extent
+    rule): after a heavy paged run with recycling, no armed watchpoint
+    may reference a page that is currently unallocated."""
+    cfg, model, params = _model()
+    det = ServingDetectors(ProfilerConfig(enabled=True, num_watchpoints=8,
+                                          seed=1), sites_per_step=4)
+    eng = ServeEngine(model, params, num_slots=2, max_len=32,
+                      detectors=det, kv_layout="paged", page_size=8)
+    rng = np.random.RandomState(9)
+    for i in range(6):
+        eng.submit(Request(
+            rid=f"s{i}",
+            tokens=rng.randint(0, cfg.vocab_size,
+                               size=rng.randint(4, 12)).astype(np.int32),
+            max_new_tokens=1 + i % 3, arrival=i))
+    eng.run(max_steps=200)
+    eng.kv.check()
+    allocated = {p for p in range(eng.kv.num_pages)
+                 if eng.kv.alloc.refcount[p] > 0}
+    for wp in det.wp.armed():
+        assert wp.meta["page"] in allocated, wp.meta
+
+
 def test_engine_rejects_unindexed_families():
     cfg = registry.get_config("zamba2-1.2b").smoke()
     model = build_model(cfg)

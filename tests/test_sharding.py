@@ -113,6 +113,29 @@ want = attention_ref(q, ck_ref, cv_ref, causal=False, kv_len=38)
 assert float(jnp.abs(out - want).max()) < 1e-4, float(jnp.abs(out - want).max())
 assert float(jnp.abs(nck - ck_ref).max()) == 0.0
 
+# --- paged flash decoding == page-table-gathered reference -------------
+from repro.serve.flash_decode import decode_paged_attention_sharded
+from repro.kernels.ref import paged_gather, paged_update
+P, ps, M = 16, 8, 4                     # pool pages shard 4-way over model
+pk = jax.random.normal(jax.random.PRNGKey(7), (P, ps, Hkv, D))
+pv = jax.random.normal(jax.random.PRNGKey(8), (P, ps, Hkv, D))
+# slot 0 live at pos 19 (page row 2, shared page 5 with slot 1's prefix);
+# slot 1 idle (negative sentinel: store drops, output is don't-care)
+pt = jnp.array([[3, 5, 9, -1], [5, 2, -1, -1]], jnp.int32)
+pidx = jnp.array([19, -2], jnp.int32)
+with mesh:
+    pout, npk, npv = jax.jit(lambda *a: decode_paged_attention_sharded(
+        *a, mesh=mesh, batch_axes=("data",), seq_axes=("model",)))(
+        q, kn, vn, pk, pv, pt, pidx)
+rpk, rpv = paged_update(pk, pv, kn, vn, pt, pidx)
+kg, valid = paged_gather(rpk, pt)
+vg, _ = paged_gather(rpv, pt)
+pwant = attention_ref(q, kg, vg, causal=False, kv_len=pidx + 1,
+                      kv_valid=valid)
+assert float(jnp.abs(pout[0] - pwant[0]).max()) < 1e-4
+assert float(jnp.abs(npk - rpk).max()) == 0.0   # idle-slot store dropped
+assert float(jnp.abs(npv - rpv).max()) == 0.0
+
 # --- mini dry-run lowering on an 8-device mesh -------------------------
 from repro.configs import registry
 from repro.configs.base import TrainConfig

@@ -7,8 +7,15 @@ Numbers, honestly separated (DESIGN.md §2):
     several sampling periods — expensive by construction (software
     watchpoints), reported for completeness;
   * Serving: batched prefill vs the seed's token-by-token cache fill,
-    and the serve-side Tier-3 detectors' overhead on the engine's
-    decode loop.
+    the serve-side Tier-3 detectors' overhead on the engine's decode
+    loop, and speculative decoding (`serve_spec_*`): decode tok/s of
+    draft+verify against plain one-token decode on a repetitive-prompt
+    workload, with accept rates reported per drafter.
+
+Every row can also run at toy sizes (``run(toy=True)``) — the CI smoke
+(`tests/test_benchmarks.py`) executes the full row set once so a broken
+row (the PR-3 `serve_paged_*` bit-rot failure mode) fails loudly
+instead of silently vanishing from the report.
 """
 from __future__ import annotations
 
@@ -25,6 +32,7 @@ from repro.core.interpreter import profile_fn
 from repro.models.zoo import build_model
 from repro.serve.decode import make_serve_step
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.spec import NGramDrafter, ReplayDrafter
 from repro.train import state as TS
 from repro.train.step import make_train_step
 
@@ -37,7 +45,7 @@ def _time(fn, n=5):
     return (time.perf_counter() - t0) / n
 
 
-def run():
+def run(toy: bool = False):
     rows = []
     cfg = registry.get_config("qwen3-1.7b").smoke()
     model = build_model(cfg)
@@ -73,16 +81,16 @@ def run():
         det.on_batch(stepno[0], batch)
         stepno[0] += 1
         holder["state"] = s
-    for _ in range(6):               # populate reservoir + remaining jits
+    for _ in range(2 if toy else 6):  # populate reservoir + remaining jits
         with_tier3()
-    t3 = _time(with_tier3, n=10)
+    t3 = _time(with_tier3, n=2 if toy else 10)
     rows.append(("overhead.tier3_step", t3 * 1e6,
                  f"slowdown={t3/t_native:.3f}x"))
 
     # Tier-1: smaller forward-only subject, per period
     fwd = lambda toks: model.forward(  # noqa: E731
         jax.tree_util.tree_map(lambda x: x, holder["state"].params), toks)[0].sum()
-    small = toks[:1, :16]
+    small = toks[:1, :8 if toy else 16]
     for period in (1000, 5000, 10000):
         pc = ProfilerConfig(enabled=True, period=period)
         t0 = time.perf_counter()
@@ -95,29 +103,31 @@ def run():
     # (DESIGN.md §2). Same seed -> the replayed event stream is the
     # recorded stream, so the profiles must be identical bit for bit.
     pc = ProfilerConfig(enabled=True, period=5000)
+    epochs = 3 if toy else 8
     t0 = time.perf_counter()
-    rep_re = profile_fn(fwd, small, cfg=pc, epochs=8, replay=False)
+    rep_re = profile_fn(fwd, small, cfg=pc, epochs=epochs, replay=False)
     t_re = time.perf_counter() - t0
     t0 = time.perf_counter()
-    rep_rp = profile_fn(fwd, small, cfg=pc, epochs=8, replay=True)
+    rep_rp = profile_fn(fwd, small, cfg=pc, epochs=epochs, replay=True)
     t_rp = time.perf_counter() - t0
     identical = (rep_re == rep_rp
                  and rep_re.fractions() == rep_rp.fractions())
     rows.append(("overhead.tier1_reinterp_e8", t_re * 1e6, "baseline"))
     rows.append(("overhead.tier1_replay_e8", t_rp * 1e6,
                  f"speedup={t_re/t_rp:.1f}x|identical={identical}"))
-    rows.extend(run_serve())
+    rows.extend(run_serve(toy))
+    rows.extend(run_spec(toy))
     return rows
 
 
-def run_serve():
+def run_serve(toy: bool = False):
     """Serving-tier entries: prefill speedup + detector decode overhead."""
     rows = []
     cfg = registry.get_config("qwen3-1.7b").smoke()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    B, P = 4, 32
-    max_len = 256                   # engine cache: slots stay live a while
+    B, P = 4, 16 if toy else 32
+    max_len = 64 if toy else 256    # engine cache: slots stay live a while
     prompts = jax.random.randint(jax.random.PRNGKey(2), (B, P), 0,
                                  cfg.vocab_size)
     # prefill comparison cache sized to the workload (prompt + headroom)
@@ -137,8 +147,8 @@ def run_serve():
     def batched():
         lg, c = prefill(params, cache0, prompts)
         jax.block_until_ready(lg)
-    t_loop = _time(tokenloop, n=3)
-    t_batch = _time(batched, n=3)
+    t_loop = _time(tokenloop, n=1 if toy else 3)
+    t_batch = _time(batched, n=1 if toy else 3)
     rows.append(("overhead.serve_prefill_tokenloop", t_loop * 1e6,
                  "baseline"))
     rows.append(("overhead.serve_prefill_batched", t_batch * 1e6,
@@ -155,14 +165,15 @@ def run_serve():
                 tokens=rng.randint(0, cfg.vocab_size, size=P).astype(np.int32),
                 max_new_tokens=max_len))       # slots stay live throughout
         eng._admit()
-        for _ in range(4):                      # warm jits + reservoir
+        for _ in range(2 if toy else 4):        # warm jits + reservoir
             eng._decode_tick()
         return eng
 
+    nt = 2 if toy else 10
     eng0 = mk_engine(None)
-    t_plain = _time(eng0._decode_tick, n=10)
+    t_plain = _time(eng0._decode_tick, n=nt)
     eng3 = mk_engine(ServingDetectors(ProfilerConfig(enabled=True)))
-    t_det = _time(eng3._decode_tick, n=10)
+    t_det = _time(eng3._decode_tick, n=nt)
     rows.append(("overhead.serve_decode_step", t_plain * 1e6, "baseline"))
     rows.append(("overhead.serve_tier3_step", t_det * 1e6,
                  f"slowdown={t_det/t_plain:.3f}x"))
@@ -171,12 +182,12 @@ def run_serve():
     # and detector overhead in paged mode — the serving-side perf
     # trajectory the detect→optimize loop opened
     engp = mk_engine(None, kv="paged")
-    t_paged = _time(engp._decode_tick, n=10)
+    t_paged = _time(engp._decode_tick, n=nt)
     rows.append(("overhead.serve_paged_decode_step", t_paged * 1e6,
                  f"vs_dense={t_paged/t_plain:.3f}x"))
     engp3 = mk_engine(ServingDetectors(ProfilerConfig(enabled=True)),
                       kv="paged")
-    t_paged_det = _time(engp3._decode_tick, n=10)
+    t_paged_det = _time(engp3._decode_tick, n=nt)
     rows.append(("overhead.serve_paged_tier3_step", t_paged_det * 1e6,
                  f"slowdown={t_paged_det/t_paged:.3f}x"))
 
@@ -188,7 +199,7 @@ def run_serve():
     dup = np.random.RandomState(1).randint(
         0, cfg.vocab_size, size=P).astype(np.int32)
 
-    def dup_prefill_time(kv, n=6):
+    def dup_prefill_time(kv, n=2 if toy else 6):
         eng = ServeEngine(model, params, num_slots=2, max_len=max_len,
                           kv_layout=kv)
         eng.submit(Request(rid="donor", tokens=dup, max_new_tokens=1))
@@ -210,4 +221,73 @@ def run_serve():
     rows.append(("overhead.serve_paged_prefill_hit", t_paged_admit * 1e6,
                  f"speedup={t_dense_admit/t_paged_admit:.1f}x"
                  f"|hit_frac={hit_frac:.2f}"))
+    return rows
+
+
+def run_spec(toy: bool = False):
+    """Speculative decoding: decode tok/s of draft+verify vs plain
+    one-token decode on a repetitive-prompt workload (each prompt tiles
+    a short block, the canonical high-accept traffic).
+
+    Every engine serves TWO request waves; the second wave (warm jits,
+    and — for the n-gram drafter — a populated self-speculation corpus)
+    is what is measured, so the numbers are steady-state µs per emitted
+    decode token, not compile time. The replay-oracle row is the
+    mechanism's upper bound (accept-rate 1.0); the n-gram row is what a
+    drafter earns on repeating traffic; the rollback row shows the
+    paged no-dead-store commit costs nothing extra."""
+    rows = []
+    cfg = registry.get_config("qwen3-1.7b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B = 2 if toy else 4
+    P = 16 if toy else 32
+    G = 8 if toy else 24
+    rng = np.random.RandomState(0)
+    prompts = []
+    for b in range(B):
+        block = rng.randint(0, cfg.vocab_size, size=4).astype(np.int32)
+        prompts.append(np.tile(block, -(-P // 4))[:P])
+
+    def serve(kv, drafter, rollback=True):
+        eng = ServeEngine(model, params, num_slots=B, max_len=P + G + 1,
+                          kv_layout=kv, drafter=drafter, spec_k=4,
+                          spec_rollback=rollback)
+        outs = None
+        for wave in range(2):
+            for b in range(B):
+                eng.submit(Request(rid=f"w{wave}b{b}",
+                                   tokens=prompts[b].copy(),
+                                   max_new_tokens=G))
+            before = dict(eng.stats)
+            eng.run(max_steps=2000)
+            if wave == 0:
+                outs = [list(eng.finished[f"w0b{b}"].generated)
+                        for b in range(B)]
+        st = eng.stats
+        # the drafter's host time is part of the decode cost (numbers,
+        # honestly separated): a drafter whose proposals cost more than
+        # the verify saves must show up as a slowdown here
+        dt = (st["decode_s"] + st["draft_s"]
+              - before["decode_s"] - before["draft_s"])
+        dtok = st["decode_tokens"] - before["decode_tokens"]
+        us_tok = dt / max(dtok, 1) * 1e6
+        prop = st["draft_proposed"] - before["draft_proposed"]
+        acc = st["draft_accepted"] - before["draft_accepted"]
+        return outs, us_tok, (acc / prop if prop else 0.0)
+
+    out0, t_plain, _ = serve("dense", None)
+    rows.append(("overhead.serve_spec_plain_decode", t_plain,
+                 "baseline (us/decode tok)"))
+    seqs = [np.concatenate([prompts[b], np.asarray(out0[b], np.int32)])
+            for b in range(B)]
+    _, t_or, a_or = serve("dense", ReplayDrafter(seqs))
+    rows.append(("overhead.serve_spec_oracle_decode", t_or,
+                 f"speedup={t_plain/t_or:.1f}x|accept={a_or:.2f}"))
+    _, t_ng, a_ng = serve("dense", NGramDrafter())
+    rows.append(("overhead.serve_spec_ngram_decode", t_ng,
+                 f"speedup={t_plain/t_ng:.1f}x|accept={a_ng:.2f}"))
+    _, t_rb, a_rb = serve("paged", ReplayDrafter(seqs), rollback=True)
+    rows.append(("overhead.serve_spec_rollback_decode", t_rb,
+                 f"speedup={t_plain/t_rb:.1f}x|accept={a_rb:.2f}"))
     return rows

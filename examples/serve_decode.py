@@ -21,7 +21,13 @@ slots, some sharing a prompt prefix, different generation budgets) to
   * with ``--kv paged`` the engine runs the block-paged KV heap
     (refcounted pages, copy-on-write prefix reuse): the duplicated
     prefixes become cache hits, idle/finished slots write nothing, and
-    the same detectors report the waste eliminated.
+    the same detectors report the waste eliminated;
+  * with ``--spec`` the engine decodes speculatively: the n-gram
+    drafter proposes from the request's own history and a corpus of
+    served sequences (duplicated traffic drafts itself), one width-k
+    verify forward accepts the greedy-consistent prefix, and rejected
+    drafts surface as ``rejected_draft_store`` dead stores — eliminated
+    by rollback in the paged layout.
 """
 import argparse
 
@@ -34,6 +40,7 @@ from repro.configs.base import ProfilerConfig
 from repro.core.detectors import ServingDetectors
 from repro.models.zoo import build_model
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.spec import NGramDrafter
 
 
 def main():
@@ -46,6 +53,9 @@ def main():
     ap.add_argument("--gen", type=int, default=12)
     ap.add_argument("--kv", default="dense", choices=("dense", "paged"))
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative decode with the n-gram drafter")
+    ap.add_argument("--spec-k", type=int, default=4)
     a = ap.parse_args()
 
     cfg = registry.get_config(a.arch).smoke()
@@ -55,7 +65,9 @@ def main():
     det = ServingDetectors(ProfilerConfig(enabled=True))
     eng = ServeEngine(model, params, num_slots=a.slots,
                       max_len=a.prompt_len + a.gen + 1, detectors=det,
-                      kv_layout=a.kv, page_size=a.page_size)
+                      kv_layout=a.kv, page_size=a.page_size,
+                      drafter=NGramDrafter() if a.spec else None,
+                      spec_k=a.spec_k)
 
     rng = np.random.RandomState(0)
     shared = rng.randint(0, cfg.vocab_size, size=a.prompt_len // 2)
@@ -79,6 +91,10 @@ def main():
           f"({s['prefix_hit_tokens']} tokens from cache), computed "
           f"{s['prefill_computed_tokens']}/{s['prefill_tokens']} prompt "
           f"tokens, {s['pages_freed']} pages freed")
+    if a.spec:
+        print(f"[example] spec: accepted drafts: {s['draft_accepted']} "
+              f"of {s['draft_proposed']} proposed "
+              f"(accept rate {tp.get('accept_rate', 0.0):.2f})")
     for rid in sorted(eng.finished):
         r = eng.finished[rid]
         print(f"  {rid}: {len(r.generated)} tokens, "

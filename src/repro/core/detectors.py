@@ -36,6 +36,7 @@ the sampled leaf/site set, mirroring the paper's 7%-overhead philosophy.
 """
 from __future__ import annotations
 
+import zlib
 from collections import OrderedDict
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
@@ -65,8 +66,12 @@ def _leaf_paths(tree) -> List[Tuple[str, Any]]:
 
 def _leaf_event(path: str, leaf) -> MemEvent:
     # metadata comes from the array handle; the leaf itself is held by
-    # reference (no device->host transfer unless digest() is called)
-    return MemEvent(kind=STORE, address=hash(path) & 0x7FFFFFFF,
+    # reference (no device->host transfer unless digest() is called).
+    # crc32, NOT hash(): Python string hashing is salted per process
+    # (PYTHONHASHSEED), so hash()-derived addresses made equal-address
+    # collisions — and therefore trap/disarm behavior — vary across
+    # runs. crc32 is stable, so profiles reproduce.
+    return MemEvent(kind=STORE, address=zlib.crc32(path.encode()) & 0x7FFFFFFF,
                     nelems=int(leaf.size), itemsize=int(leaf.dtype.itemsize),
                     values=leaf, ctx=(path,))
 
@@ -182,6 +187,27 @@ class SlotWrite:
         self.pos = pos
         self.page = slot if page is None else page
         self.offset = pos if offset is None else offset
+
+
+class VerifyWrite:
+    """One slot's speculative verify-window K/V stores in one tick.
+
+    `sites` lists the DRAFT rows actually stored this tick, in window
+    order, as (page, offset, rejected): rejected rows are Def.-1 dead
+    stores (written for a token past the accept point, never read by
+    the request, overwritten by the next window). Under rollback the
+    engine never stores rejected rows, so every site arrives with
+    rejected=False — the fraction collapses to zero, which is exactly
+    the detect→optimize claim the acceptance test pins."""
+
+    __slots__ = ("slot", "rid", "accepted", "sites")
+
+    def __init__(self, slot: int, rid: str, accepted: int,
+                 sites: Sequence[Tuple[int, int, bool]]):
+        self.slot = slot
+        self.rid = rid
+        self.accepted = accepted
+        self.sites = list(sites)
 
 
 class ServingDetectors:
@@ -327,6 +353,39 @@ class ServingDetectors:
         for wp in list(self.wp.armed()):
             if wp.meta.get("page") in freed:
                 self.wp.disarm(wp)
+
+    # -- speculative verify (rejected-draft dead stores) ---------------
+    def on_verify(self, step: int,
+                  entries: Sequence[VerifyWrite]) -> List[Finding]:
+        """One engine verify tick's draft-row K/V stores (Def. 1 at the
+        speculative-decode site): every proposed-and-stored draft row
+        is checked, rows past the accept point are flagged — dead by
+        construction
+        (the value is never read and the next verify window overwrites
+        it). Deterministic accounting, no sampling: the engine already
+        knows exactly which rows it stored and where the accept point
+        fell, so estimating would only add noise. A rejected row is
+        written in EVERY layer of the stack, so its cost is
+        site_bytes * num_layers."""
+        out: List[Finding] = []
+        for e in entries:
+            for page, off, rejected in e.sites:
+                self.report.observe("rejected_draft_store", rejected)
+                if rejected:
+                    # derived, not drawn: a shared-RNG draw here would
+                    # shift the OTHER detectors' watchpoint sampling
+                    # between overwrite and rollback runs at the same
+                    # seed, making cross-mode fractions non-comparable
+                    layer = (page * 131 + off) % self.num_layers
+                    f = self.report.add_pair(
+                        "rejected_draft_store", 3,
+                        ("serve.spec:draft", f"req:{e.rid}"),
+                        ("serve.engine:verify", f"slot:{e.slot}"),
+                        self.site_bytes * self.num_layers,
+                        layer=layer, page=page, offset=off,
+                        accepted=e.accepted)
+                    out.append(f)
+        return out
 
     # -- per-tick watchpoints ------------------------------------------
     def on_step(self, step: int, writes: Sequence[SlotWrite],

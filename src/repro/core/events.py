@@ -264,13 +264,28 @@ class EventEngine:
 
     def _check_traps(self, access: str, ev: MemEvent) -> None:
         prof = self.profile
+        # Two passes per reservoir, stale disarms FIRST: with several
+        # watchpoints tied on one (recycled) address, classification and
+        # stale-disarm used to interleave in slot order, so which
+        # watchpoints survived the event depended on how earlier slots
+        # happened to be filled. Disarming every stale tie up front
+        # makes the surviving set — and the profile — a function of the
+        # event stream alone.
+        store_hits, load_hits = [], []
         for wp in self.wp[STORE].matching(lambda w: w.address == ev.address):
             if wp.offset >= ev.nelems:
                 # stale watchpoint: a shorter event at the same (recycled)
                 # address means the watched element no longer exists —
                 # skip classification entirely and free the slot
                 self.wp[STORE].disarm(wp)
-                continue
+            else:
+                store_hits.append(wp)
+        for wp in self.wp[LOAD].matching(lambda w: w.address == ev.address):
+            if wp.offset >= ev.nelems:
+                self.wp[LOAD].disarm(wp)
+            else:
+                load_hits.append(wp)
+        for wp in store_hits:
             if wp.meta == "dead_store":
                 # Def. 1: store;store with no intervening load is dead
                 hit = access == STORE
@@ -291,10 +306,7 @@ class EventEngine:
                     prof.add_pair("silent_store", self.tier, wp.context,
                                   ev.ctx, wp.size)
                 self.wp[STORE].disarm(wp)
-        for wp in self.wp[LOAD].matching(lambda w: w.address == ev.address):
-            if wp.offset >= ev.nelems:
-                self.wp[LOAD].disarm(wp)
-                continue
+        for wp in load_hits:
             if access == LOAD:
                 cur = ev.value_at(wp.offset)
                 if cur is None:

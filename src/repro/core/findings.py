@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
@@ -28,6 +29,20 @@ SCHEMA_VERSION = 1
 
 # kinds whose fraction estimator is meaningful per-access (Defs. 1-3)
 TIER1_KINDS = ("dead_store", "silent_store", "silent_load")
+
+
+def _fmax(a: float, b: float) -> float:
+    """NaN-robust max: prefer the non-NaN operand (both NaN -> NaN).
+
+    Python's max() is order-dependent under NaN (max(nan, 1) is nan but
+    max(1, nan) is 1), which silently broke the §5.6 merge's
+    associativity/commutativity for NaN-bearing findings — the merge
+    fuzz test pins this."""
+    if math.isnan(a):
+        return b
+    if math.isnan(b):
+        return a
+    return max(a, b)
 
 
 @dataclass
@@ -59,7 +74,7 @@ class Finding:
         self.count += other.count
         self.bytes += other.bytes
         self.flops += other.flops
-        self.fraction = max(self.fraction, other.fraction)
+        self.fraction = _fmax(self.fraction, other.fraction)
         self.step = max(self.step, other.step)
         for k, v in other.meta.items():
             self.meta.setdefault(k, v)

@@ -63,7 +63,8 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
 # ----------------------------------------------------------------------
 def paged_update(pool_k: jax.Array, pool_v: jax.Array, k_new: jax.Array,
                  v_new: jax.Array, pt: jax.Array,
-                 idx: jax.Array) -> tuple:
+                 idx: jax.Array,
+                 length: Optional[jax.Array] = None) -> tuple:
     """Scatter new K/V rows into a paged pool through the page table.
 
     pool: (P, page, Hkv, D); k_new/v_new: (B, S, Hkv, D); pt: (B, M)
@@ -73,11 +74,18 @@ def paged_update(pool_k: jax.Array, pool_v: jax.Array, k_new: jax.Array,
     whose page is unmapped are DROPPED — idle/finished slots write
     nothing past their page-table extent, which is exactly the dead/
     silent-store waste of the dense layout eliminated.
+
+    ``length`` (optional, (B,)): per-slot row budget — rows s >=
+    length[b] are dropped too. Speculative rollback commits exactly the
+    accepted prefix of a verify window this way (LM.commit_verify), so
+    rejected draft rows never reach the pool at all.
     """
     P, ps = pool_k.shape[0], pool_k.shape[1]
     B, S = k_new.shape[0], k_new.shape[1]
     M = pt.shape[1]
     pos = idx[:, None] + jnp.arange(S)[None, :]            # (B,S) logical
+    if length is not None:
+        pos = jnp.where(jnp.arange(S)[None, :] < length[:, None], pos, -1)
     page_i = jnp.floor_divide(pos, ps)
     page = jnp.where(
         (page_i >= 0) & (page_i < M),

@@ -14,6 +14,17 @@ separately.
 (serve/kv_cache.py): refcounted pages + copy-on-write prefix reuse,
 eliminating exactly the waste the detectors flag in dense mode —
 idle-slot dead/silent KV stores and silent prefix loads.
+
+``--spec on`` adds speculative decoding (serve/spec.py): a host-side
+drafter proposes up to ``--spec-k`` tokens per tick and ONE width-(k+1)
+verify forward accepts the greedy-consistent prefix, so outputs stay
+bit-identical to plain decode while live slots emit up to k+1 tokens
+per tick. Rejected drafts are Def.-1 dead KV stores — measured by the
+``rejected_draft_store`` detector site, and eliminated in the paged
+layout by ``--spec-rollback on`` (the commit stops at the accept
+point). ``--draft oracle`` runs a plain pass first and replays its
+continuations (accept-rate 1.0 — the mechanism's upper bound and a live
+bit-identity assertion).
 """
 from __future__ import annotations
 
@@ -35,6 +46,7 @@ from repro.data.synthetic import batch_at
 from repro.models.zoo import build_model
 from repro.serve.decode import make_serve_step
 from repro.serve.engine import ENGINE_FAMILIES, Request, ServeEngine
+from repro.serve.spec import make_drafter
 
 
 def padding_waste_profile(stats) -> WasteProfile:
@@ -58,25 +70,50 @@ def padding_waste_profile(stats) -> WasteProfile:
 
 
 def _run_engine(cfg, model, params, prompts, gen, seed, profile,
-                kv="dense", page_size=16):
+                kv="dense", page_size=16, spec=False, spec_k=4,
+                draft="ngram", spec_rollback=True):
     batch, prompt_len = prompts.shape
     max_len = prompt_len + gen + 1
+
+    def build_and_run(drafter, det):
+        eng = ServeEngine(model, params, num_slots=batch, max_len=max_len,
+                          detectors=det, kv_dtype=jnp.float32,
+                          kv_layout=kv, page_size=page_size,
+                          drafter=drafter, spec_k=spec_k,
+                          spec_rollback=spec_rollback)
+        for b in range(batch):
+            eng.submit(Request(rid=f"r{b}", tokens=np.asarray(prompts[b]),
+                               max_new_tokens=gen))
+        eng.run()
+        out = np.stack(
+            [np.asarray(eng.finished[f"r{b}"].generated[:gen], np.int32)
+             for b in range(batch)])
+        return eng, out
+
+    drafter = None
+    plain_out = None
+    if spec:
+        if draft == "oracle":
+            # harvest the plain greedy continuations first; the replay
+            # drafter then proposes exactly them (accept-rate 1.0) —
+            # the upper bound of the verify/rollback machinery, and a
+            # live bit-identity check of the acceptance rule
+            _, plain_out = build_and_run(None, None)
+            seqs = [np.concatenate([np.asarray(prompts[b]), plain_out[b]])
+                    for b in range(batch)]
+            drafter = make_drafter("oracle", sequences=seqs)
+        else:
+            drafter = make_drafter(draft, model=model, params=params)
     det = ServingDetectors(ProfilerConfig(enabled=True, seed=seed)) \
         if profile else None
-    eng = ServeEngine(model, params, num_slots=batch, max_len=max_len,
-                      detectors=det, kv_dtype=jnp.float32,
-                      kv_layout=kv, page_size=page_size)
-    for b in range(batch):
-        eng.submit(Request(rid=f"r{b}", tokens=np.asarray(prompts[b]),
-                           max_new_tokens=gen))
-    eng.run()
-    out = jnp.asarray(np.stack(
-        [np.asarray(eng.finished[f"r{b}"].generated[:gen], np.int32)
-         for b in range(batch)]))
+    eng, out = build_and_run(drafter, det)
+    if plain_out is not None:
+        assert np.array_equal(out, plain_out), \
+            "speculative outputs diverged from plain greedy decode"
     tp = eng.throughput()
     tier3 = det.report if det is not None else None
     tier2_subject = eng.lowered_tick() if profile else None
-    return out, tp, tier3, tier2_subject, eng.stats
+    return jnp.asarray(out), tp, tier3, tier2_subject, eng.stats
 
 
 def _run_legacy(cfg, model, params, prompts, gen, kw):
@@ -111,7 +148,9 @@ def _run_legacy(cfg, model, params, prompts, gen, kw):
 def run(arch: str, *, smoke: bool = True, batch: int = 4,
         prompt_len: int = 32, gen: int = 16, seed: int = 0,
         profile: bool = False, profile_out: str = None,
-        kv: str = "dense", page_size: int = 16):
+        kv: str = "dense", page_size: int = 16,
+        spec: bool = False, spec_k: int = 4, draft: str = "ngram",
+        spec_rollback: bool = True):
     cfg = registry.get_config(arch)
     if smoke:
         cfg = cfg.smoke()
@@ -131,10 +170,14 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
     if cfg.family in ENGINE_FAMILIES:
         out, tp, tier3, tier2_subject, stats = _run_engine(
             cfg, model, params, prompts, gen, seed, profile,
-            kv=kv, page_size=page_size)
+            kv=kv, page_size=page_size, spec=spec, spec_k=spec_k,
+            draft=draft, spec_rollback=spec_rollback)
     else:
         if kv != "dense":
             raise ValueError(f"--kv paged needs the engine families "
+                             f"{ENGINE_FAMILIES}, not {cfg.family!r}")
+        if spec:
+            raise ValueError(f"--spec needs the engine families "
                              f"{ENGINE_FAMILIES}, not {cfg.family!r}")
         out, tp, _, tier2_subject = _run_legacy(
             cfg, model, params, prompts, gen, kw)
@@ -152,6 +195,15 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
               f"{stats['prefill_tokens']} prompt tokens, "
               f"padded waste {stats['padded_prefill_tokens']} tokens, "
               f"pages freed {stats['pages_freed']}")
+    if spec and stats is not None:
+        mode = "rollback" if (spec_rollback and kv == "paged") \
+            else "overwrite"
+        print(f"[serve] spec[{draft},{mode}]: accepted drafts: "
+              f"{stats['draft_accepted']} of {stats['draft_proposed']} "
+              f"proposed (accept rate {tp.get('accept_rate', 0.0):.2f}) | "
+              f"draft {tp.get('draft_tok_s', 0.0):.0f} tok/s, "
+              f"verify {tp.get('verify_tok_s', 0.0):.0f} tok/s over "
+              f"{stats['spec_ticks']} verify ticks")
     print("[serve] sample continuation:", np.asarray(out[0])[:12])
 
     if profile:
@@ -190,12 +242,27 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--kv", default="dense", choices=("dense", "paged"))
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--spec", default="off", choices=("on", "off"),
+                    help="speculative decoding (draft + width-k verify)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens per verify window")
+    ap.add_argument("--draft", default="ngram",
+                    choices=("ngram", "oracle", "lm"),
+                    help="drafter: self-speculative n-gram lookup, the "
+                         "replay oracle (runs a plain pass first; "
+                         "accept-rate 1.0), or the model drafting for "
+                         "itself")
+    ap.add_argument("--spec-rollback", default="on", choices=("on", "off"),
+                    help="paged only: roll the commit back to the accept "
+                         "point instead of storing rejected draft rows")
     ap.add_argument("--profile", action="store_true")
     ap.add_argument("--profile-out", default=None)
     a = ap.parse_args()
     run(a.arch, smoke=a.smoke, batch=a.batch, prompt_len=a.prompt_len,
         gen=a.gen, profile=a.profile, profile_out=a.profile_out,
-        kv=a.kv, page_size=a.page_size)
+        kv=a.kv, page_size=a.page_size, spec=a.spec == "on",
+        spec_k=a.spec_k, draft=a.draft,
+        spec_rollback=a.spec_rollback == "on")
 
 
 if __name__ == "__main__":

@@ -86,11 +86,22 @@ def apply_attention(p, cfg: ModelConfig, x: jax.Array, *,
                     causal: bool = True,
                     cache: Optional[Dict[str, jax.Array]] = None,
                     use_rope: bool = True,
+                    spec: Optional[str] = None,
                     ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Self- or cross-attention with optional KV cache.
 
     cache: {"k": (B,Smax,Hkv,D), "v": ..., "idx": scalar int32} — decode
     writes the new K/V at idx and attends over [0, idx+len).
+
+    ``spec`` marks a speculative width-k verify forward (LM.verify):
+      "overwrite" — all S window rows are stored, but bounded: rows past
+          the cache extent / page table drop instead of clamp-shifting
+          onto committed history (rejected rows become Def.-1 dead
+          stores, the waste `rejected_draft_store` measures);
+      "defer" (paged only) — the pool is untouched; the window's K/V
+          ride in ``win_k``/``win_v`` for `LM.commit_verify` to scatter
+          only the accepted prefix (rollback: rejected rows never become
+          cache stores at all).
     """
     B, S, _ = x.shape
     H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -124,7 +135,33 @@ def apply_attention(p, cfg: ModelConfig, x: jax.Array, *,
     new_cache = None
     kv_len = None
     kv_valid = None
-    if cache is not None and kv_src is None and "pt" in cache:
+    if (cache is not None and kv_src is None and "pt" in cache
+            and spec == "defer"):
+        # speculative verify, rollback mode: the pool is NOT written.
+        # Attention runs over the gathered logical view with the verify
+        # window spliced in at its positions — pure activation memory —
+        # and the window K/V ride in win_k/win_v for LM.commit_verify to
+        # scatter only the accepted prefix. Values round-trip through
+        # the pool dtype exactly like the scatter-then-gather path, so
+        # the logits are bit-identical to overwrite mode.
+        from repro.kernels import ops
+        idx = cache["idx"]
+        pt = cache["pt"]
+        kg, valid = ops.paged_gather(cache["k"], pt)
+        vg, _ = ops.paged_gather(cache["v"], pt)
+        ext = kg.shape[1]
+        pos = idx[:, None] + jnp.arange(S)[None, :]
+        tgt = jnp.where((pos >= 0) & (pos < ext), pos, ext)
+        bidx = jnp.arange(B)[:, None]
+        kg = kg.at[bidx, tgt].set(k.astype(kg.dtype), mode="drop")
+        vg = vg.at[bidx, tgt].set(v.astype(vg.dtype), mode="drop")
+        kv_valid = valid.at[bidx, tgt].set(True, mode="drop")
+        new_cache = {**cache, "idx": idx + S, "win_k": k, "win_v": v}
+        k, v = kg.astype(dt), vg.astype(dt)
+        kv_len = idx + S
+        q_offset = idx
+        causal = True
+    elif cache is not None and kv_src is None and "pt" in cache:
         # block-paged cache (serve/kv_cache.py): pool (P,page,Hkv,D),
         # page table (B,M), per-slot positions (B,). Stores scatter
         # through the table (out-of-table/idle writes DROP — no dead
@@ -143,6 +180,25 @@ def apply_attention(p, cfg: ModelConfig, x: jax.Array, *,
             if plan is not None:
                 b_ax, s_ax = plan
                 out, ck, cv = decode_paged_attention_sharded(
+                    q, k, v, cache["k"], cache["v"], pt, idx,
+                    mesh=sharder.mesh, batch_axes=b_ax, seq_axes=s_ax)
+                new_cache = {**cache, "k": ck, "v": cv, "idx": idx + S}
+                out = out.reshape(B, S, H * D)
+                out = out @ p["wo"]["w"].astype(dt)
+                return shard(out, "btd"), new_cache
+        elif spec == "overwrite":
+            # width-k speculative verify against a page-chunk-sharded
+            # pool: each shard scatters the window rows it owns and the
+            # per-query partials combine flash-style
+            from repro.serve.flash_decode import (
+                paged_shard_plan, verify_paged_attention_sharded)
+            from repro.sharding.ctx import current_sharder
+            sharder = current_sharder()
+            plan = paged_shard_plan(sharder, B, cache["k"].shape[0],
+                                    cache["k"].shape[1])
+            if plan is not None:
+                b_ax, s_ax = plan
+                out, ck, cv = verify_paged_attention_sharded(
                     q, k, v, cache["k"], cache["v"], pt, idx,
                     mesh=sharder.mesh, batch_axes=b_ax, seq_axes=s_ax)
                 new_cache = {**cache, "k": ck, "v": cv, "idx": idx + S}
@@ -179,7 +235,22 @@ def apply_attention(p, cfg: ModelConfig, x: jax.Array, *,
                 return shard(out, "btd"), new_cache
         # fallback: in-place update + masked attention (single device /
         # unshardable shapes)
-        if jnp.ndim(idx) == 1:
+        if jnp.ndim(idx) == 1 and spec is not None:
+            # width-k verify over dense per-slot rows: a bounded scatter
+            # instead of the DUS below — DUS clamps an overflowing start
+            # index, which would shift the window back onto committed
+            # history; here rows past the cache extent simply drop
+            # (committed tokens never reach there, only rejected drafts
+            # and padding — see LM.verify)
+            Smax = cache["k"].shape[1]
+            pos = idx[:, None] + jnp.arange(S)[None, :]
+            tgt = jnp.where((pos >= 0) & (pos < Smax), pos, Smax)
+            bidx = jnp.arange(B)[:, None]
+            ck = cache["k"].at[bidx, tgt].set(
+                k.astype(cache["k"].dtype), mode="drop")
+            cv = cache["v"].at[bidx, tgt].set(
+                v.astype(cache["v"].dtype), mode="drop")
+        elif jnp.ndim(idx) == 1:
             # per-slot write positions (serving engine): each row lands at
             # its own sequence offset
             upd = jax.vmap(
@@ -275,10 +346,11 @@ def decl_dense_block(cfg: ModelConfig) -> Dict[str, Any]:
 
 
 def apply_dense_block(p, cfg: ModelConfig, x, *, causal=True, cache=None,
-                      positions=None, use_rope=True):
+                      positions=None, use_rope=True, spec=None):
     h, new_cache = apply_attention(
         p["attn"], cfg, apply_rmsnorm(p["ln1"], x, cfg.norm_eps),
-        causal=causal, cache=cache, positions=positions, use_rope=use_rope)
+        causal=causal, cache=cache, positions=positions, use_rope=use_rope,
+        spec=spec)
     x = x + h
     x = x + apply_mlp(p["mlp"], cfg, apply_rmsnorm(p["ln2"], x, cfg.norm_eps))
     return x, new_cache

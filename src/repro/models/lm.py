@@ -503,8 +503,65 @@ class LM:
                 cache, jnp.asarray(lengths, jnp.int32))
         return logits, cache
 
-    def decode_step(self, params, cache, tokens: jax.Array) -> Tuple[jax.Array, Any]:
-        """One decode step. tokens: (B, S). Returns (logits, new_cache)."""
+    # ------------------------- speculative verify --------------------
+    def verify(self, params, cache, tokens: jax.Array, *,
+               commit: bool = True) -> Tuple[jax.Array, Any]:
+        """Width-k speculative verification forward.
+
+        tokens: (B, W) = [last accepted token, draft_1 .. draft_{W-1}]
+        at each slot's own cache offset (the engine's per-slot (B,)
+        write index). One call yields the logits of all W positions —
+        position j attends the committed history plus window rows <= j —
+        so the greedy acceptance chain and the bonus token come out of a
+        single forward instead of W sequential decode steps.
+
+        commit=True ("overwrite"): all W K/V rows are stored through the
+        normal cache path (bounded: rows past the extent drop). Rows
+        past the accept point become Def.-1 dead stores — the waste
+        `ServingDetectors.rejected_draft_store` measures. commit=False
+        ("defer", paged caches only): the pool is untouched and each
+        sub-block returns the window K/V as ``win_k``/``win_v``; pair
+        with `commit_verify` to scatter only the accepted prefix
+        (rollback — the measured waste, eliminated).
+        """
+        return self.decode_step(params, cache, tokens,
+                                spec="overwrite" if commit else "defer")
+
+    def commit_verify(self, cache, start: jax.Array,
+                      length: jax.Array) -> Any:
+        """Scatter a deferred verify window's accepted prefix into the
+        paged pool: rows [0, length[b]) of each sub-block's win_k/win_v
+        land at logical positions start[b]+s through the page table
+        (length 0 = idle slot, nothing stored). Drops the win_* leaves.
+        """
+        from repro.kernels import ops
+        assert not isinstance(cache["main"], list), \
+            "commit_verify expects the scanned (stacked) cache layout"
+
+        def one(sub):
+            if "win_k" not in sub:
+                return sub
+            def upd(pk, pv, wk, wv, pt):
+                return ops.paged_update(pk, pv, wk, wv, pt, start,
+                                        length=length)
+            nk, nv = jax.vmap(upd)(sub["k"], sub["v"], sub["win_k"],
+                                   sub["win_v"], sub["pt"])
+            out = {n: v for n, v in sub.items()
+                   if n not in ("win_k", "win_v")}
+            out["k"], out["v"] = nk, nv
+            return out
+
+        new = dict(cache)
+        new["main"] = {name: one(sub) for name, sub in cache["main"].items()}
+        return new
+
+    def decode_step(self, params, cache, tokens: jax.Array, *,
+                    spec: Optional[str] = None) -> Tuple[jax.Array, Any]:
+        """One decode step. tokens: (B, S). Returns (logits, new_cache).
+
+        ``spec`` marks a speculative width-k verify forward (see
+        `verify`); it only reaches the indexed-KV sub-blocks the serving
+        engine drives (dense/moe)."""
         cfg, sch = self.cfg, self.sched
         dt = jnp.dtype(cfg.dtype)
         x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
@@ -517,12 +574,14 @@ class LM:
                 name = f"b{i}_{typ}"
                 c = c_layer[name]
                 if typ == "dense":
-                    x, nc = L.apply_dense_block(p_layer[name], cfg, x, cache=c)
+                    x, nc = L.apply_dense_block(p_layer[name], cfg, x,
+                                                cache=c, spec=spec)
                 elif typ == "moe":
                     blk = p_layer[name]
                     h, nc = L.apply_attention(
                         blk["attn"], cfg,
-                        L.apply_rmsnorm(blk["ln1"], x, cfg.norm_eps), cache=c)
+                        L.apply_rmsnorm(blk["ln1"], x, cfg.norm_eps),
+                        cache=c, spec=spec)
                     x = x + h
                     h, _ = M.apply_moe(
                         blk["moe"], cfg,

@@ -72,6 +72,59 @@ def make_engine_tick(model, strategy=None, *, paged: bool = False):
     return tick
 
 
+def make_engine_verify(model, strategy=None, *, paged: bool = False,
+                       rollback: bool = False):
+    """One speculative verify tick over the whole slot batch.
+
+    tokens: (B, W) = [last accepted token, draft_1 .. draft_{W-1}] per
+    slot (width fixed so one compiled shape serves every tick; unused
+    draft positions are padding); active: (B,) bool; draft_len: (B,)
+    number of REAL drafts in each row (0 = plain decode for that slot).
+
+    Greedy acceptance on-device: draft j+1 is accepted iff it equals the
+    verify forward's own greedy token at position j and every earlier
+    draft was accepted, so the emitted chain g[:, 0..m] is exactly what
+    plain one-token decode would have produced — bit-identical outputs,
+    up to W tokens per tick. Returns (g (B,W) greedy tokens, m (B,)
+    accepted-draft counts, next_tokens (B,1) = the bonus token g[:, m],
+    new_cache with per-slot indices advanced by 1+m).
+
+    rollback=True (paged only): the verify forward defers its K/V
+    stores and the accepted prefix is committed in the same jitted call
+    (`LM.commit_verify`) — rejected draft rows never reach the pool.
+    rollback=False: all W rows are stored and the index rolls back over
+    the rejected tail, which the next window overwrites (the Def.-1
+    dead stores `rejected_draft_store` counts)."""
+    sharder = strategy.sharder() if strategy is not None else None
+
+    def verify(params, cache, tokens, active, draft_len):
+        B, W = tokens.shape
+        idx0 = model.cache_index(cache)            # (B,)
+        stepped = cache
+        if paged:
+            # idle slots: every window position maps below the page
+            # table, so their stores drop (same sentinel idea as tick)
+            stepped = model.with_cache_index(
+                cache, jnp.where(active, idx0, -(W + 1)))
+        with sharding_ctx(sharder):
+            logits, new_cache = model.verify(params, stepped, tokens,
+                                             commit=not rollback)
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)       # (B, W)
+        ok = ((tokens[:, 1:] == g[:, :-1])
+              & (jnp.arange(W - 1)[None, :] < draft_len[:, None]))
+        m = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+        m = jnp.where(active, m, 0)
+        if rollback:
+            new_cache = model.commit_verify(
+                new_cache, idx0, jnp.where(active, 1 + m, 0))
+        nxt = jnp.take_along_axis(g, m[:, None], axis=1)
+        nxt = jnp.where(active[:, None], nxt, tokens[:, :1])
+        new_cache = model.with_cache_index(
+            new_cache, jnp.where(active, idx0 + 1 + m, idx0))
+        return g, m, nxt, new_cache
+    return verify
+
+
 def make_engine_prefill(model, strategy=None, *, paged: bool = False):
     """Grouped admission prefill.
 

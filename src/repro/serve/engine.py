@@ -26,6 +26,17 @@ Production-shaped serving over a fixed-size decode batch:
     pages into the new slot (copy-on-write for partial pages) instead of
     re-paying its K/V compute (the Def.-3 finding becomes a cache hit).
 
+  * **Speculative decoding** — pass a ``drafter`` (serve/spec.py) and
+    every decode tick becomes draft→verify→accept: the drafter proposes
+    up to ``spec_k`` tokens per live slot, ONE width-(k+1) verify
+    forward (`serve.decode.make_engine_verify` over `LM.verify`) scores
+    them, and the greedy-consistent prefix plus a bonus token are
+    emitted — outputs bit-identical to plain decode, up to k+1 tokens
+    per tick. Rejected drafts are Def.-1 dead KV stores
+    (`ServingDetectors.rejected_draft_store`); with
+    ``spec_rollback=True`` on the paged layout the commit stops at the
+    accept point (`LM.commit_verify`) and they never reach the pool.
+
 The jitted tick/prefill come from `serve.decode`'s step factories
 (sharding-context aware, so the engine composes with `tp_serve`). The
 engine needs every sub-block to carry an indexed KV cache, so it
@@ -43,8 +54,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.detectors import ServingDetectors, SlotWrite
-from repro.serve.decode import make_engine_prefill, make_engine_tick
+from repro.core.detectors import ServingDetectors, SlotWrite, VerifyWrite
+from repro.serve.decode import (make_engine_prefill, make_engine_tick,
+                                make_engine_verify)
 from repro.serve.kv_cache import PagedKV, PoolExhausted, make_page_copy
 
 ENGINE_FAMILIES = ("dense", "moe")
@@ -84,7 +96,9 @@ class ServeEngine:
                  detectors: Optional[ServingDetectors] = None,
                  kv_dtype=jnp.float32, kv_layout: str = "dense",
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 prefix_window: int = 32, strategy=None):
+                 prefix_window: int = 32, strategy=None,
+                 drafter=None, spec_k: int = 4,
+                 spec_rollback: bool = True):
         if model.cfg.family not in ENGINE_FAMILIES:
             raise ValueError(
                 f"ServeEngine needs an indexed KV cache in every block; "
@@ -100,6 +114,17 @@ class ServeEngine:
         self.detectors = detectors
         self.kv_layout = kv_layout
         self.paged = kv_layout == "paged"
+        # speculative decoding: a drafter proposes up to spec_k tokens
+        # per tick; one width-(k+1) verify forward accepts the greedy-
+        # consistent prefix (outputs stay bit-identical to plain decode)
+        self.drafter = drafter
+        self.spec = drafter is not None
+        if self.spec:
+            assert spec_k >= 1, "spec_k must be >= 1 when drafting"
+        self.spec_k = spec_k
+        # rollback (paged only): rejected draft rows never reach the KV
+        # pool; dense always overwrites (the measured waste, kept)
+        self.spec_rollback = bool(spec_rollback) and self.paged
 
         if self.paged:
             max_pages = -(-max_len // page_size)
@@ -134,12 +159,19 @@ class ServeEngine:
                       # burned (whole-batch sweep minus useful suffixes)
                       "padded_prefill_tokens": 0,
                       "prefix_hits": 0, "prefix_hit_tokens": 0,
-                      "cow_copies": 0, "pages_freed": 0}
+                      "cow_copies": 0, "pages_freed": 0,
+                      # speculative decode accounting
+                      "spec_ticks": 0, "draft_proposed": 0,
+                      "draft_accepted": 0, "draft_s": 0.0,
+                      "verify_s": 0.0, "verified_positions": 0}
 
         self._tick_fn = jax.jit(
             make_engine_tick(model, strategy, paged=self.paged))
         self._prefill_fn = jax.jit(
             make_engine_prefill(model, strategy, paged=self.paged))
+        self._verify_fn = jax.jit(make_engine_verify(
+            model, strategy, paged=self.paged,
+            rollback=self.spec_rollback)) if self.spec else None
 
         # detector geometry: the KV sub-blocks of one scanned superblock
         main = self.cache["main"]
@@ -198,6 +230,11 @@ class ServeEngine:
             req.finish_step = self.step_no
             self.finished[req.rid] = req
             self.slots[slot] = None        # recycle: slot idles until reuse
+            if self.drafter is not None:
+                # self-speculation corpus: a served sequence is future
+                # draft material (duplicated traffic drafts itself)
+                self.drafter.observe(np.concatenate(
+                    [req.tokens, np.asarray(req.generated, np.int32)]))
             if self.paged:
                 # recycling frees pages instead of leaving rows to be
                 # silently rewritten; prefix-index pins keep shared
@@ -311,6 +348,9 @@ class ServeEngine:
             self._accept_token(b, req, host[b])
 
     def _decode_tick(self) -> None:
+        if self.spec:
+            self._spec_tick()
+            return
         active = np.array([r is not None for r in self.slots])
         write_pos = self._lengths.copy()   # the position each slot writes
         t0 = time.perf_counter()
@@ -327,26 +367,140 @@ class ServeEngine:
         for b, req in enumerate(slots_now):
             if req is not None:
                 self._accept_token(b, req, host[b])
+        self._report_tick_writes(slots_now, write_pos)
+
+    def _report_tick_writes(self, slots_now, write_pos) -> None:
+        """Tier-3 reporting of one tick's first-position K/V stores."""
+        if self.detectors is None:
+            return
+        writes = []
+        for b, req in enumerate(slots_now):
+            pos = int(write_pos[b])
+            if self.paged:
+                # idle slots write NOTHING in the paged layout — the
+                # scatter dropped their store, so there is no event;
+                # a slot that just finished freed its pages (site
+                # lookup comes back unmapped) and is skipped too
+                if req is None:
+                    continue
+                page, off = self.kv.site(b, pos)
+                if page < 0:
+                    continue
+            else:
+                page, off = b, pos
+            writes.append(SlotWrite(b, req.rid if req is not None
+                                    else None, req is not None, pos,
+                                    page=page, offset=off))
+        self.detectors.on_step(self.step_no, writes, self._peek)
+
+    # ------------------------- speculative tick -----------------------
+    def _draft_cap(self, slot: int, req: Request) -> int:
+        """Drafts worth proposing for this slot: bounded by spec_k, the
+        request's remaining generation allowance (the tick's last token
+        is the bonus, so remaining-1 drafts suffice), and — in the paged
+        layout — the slot's mapped page-table extent, so an accepted
+        draft can never land on an unmapped position."""
+        limit = min(req.max_new_tokens, self.max_len - req.tokens.size)
+        cap = min(self.spec_k, limit - len(req.generated) - 1)
+        pos0 = int(self._lengths[slot])
+        if self.paged:
+            cap = min(cap, self.kv.slot_extent(slot) - pos0 - 1)
+        else:
+            cap = min(cap, self.max_len - pos0 - 1)
+        return max(0, cap)
+
+    def _spec_tick(self) -> None:
+        """One draft→verify→accept step over the whole batch.
+
+        The drafter proposes up to spec_k tokens per live slot (host
+        side); ONE width-(k+1) verify forward scores them all; the
+        greedy-consistent prefix plus the bonus token are emitted — up
+        to spec_k+1 tokens per slot per tick, bit-identical to plain
+        decode. With rollback (paged) the rejected rows never reach the
+        pool; otherwise they are stored and overwritten — the Def.-1
+        dead stores `ServingDetectors.rejected_draft_store` counts."""
+        B, W = self.num_slots, self.spec_k + 1
+        active = np.array([r is not None for r in self.slots])
+        write_pos = self._lengths.copy()
+        toks = np.zeros((B, W), np.int32)
+        toks[:, 0] = np.asarray(self.tokens)[:, 0]
+        dlen = np.zeros(B, np.int32)
+        t0 = time.perf_counter()
+        for b, req in enumerate(self.slots):
+            if req is None:
+                continue
+            cap = self._draft_cap(b, req)
+            if cap <= 0:
+                continue
+            hist = np.concatenate(
+                [req.tokens, np.asarray(req.generated, np.int32)])
+            d = np.asarray(self.drafter.propose(hist, cap),
+                           np.int32).reshape(-1)[:cap]
+            dlen[b] = d.size
+            toks[b, 1:1 + d.size] = d
+        self.stats["draft_s"] += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        g, m, nxt, self.cache = self._verify_fn(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(active), jnp.asarray(dlen))
+        nxt.block_until_ready()
+        dt = time.perf_counter() - t0
+        self.stats["verify_s"] += dt
+        self.stats["decode_s"] += dt
+        self.stats["ticks"] += 1
+        self.stats["spec_ticks"] += 1
+        self.stats["draft_proposed"] += int(dlen[active].sum())
+        self.stats["verified_positions"] += int(active.sum()) * W
+        g = np.asarray(g)
+        m = np.asarray(m)
+        self.stats["draft_accepted"] += int(m[active].sum())
+        self.tokens = nxt
+        self._lengths[active] += 1 + m[active]
+
+        slots_now = list(self.slots)
+        emitted = 0
+        for b, req in enumerate(slots_now):
+            if req is None:
+                continue
+            # emit the accepted chain + bonus; stop at EOS/limit so the
+            # output stream is exactly the plain-decode stream
+            for j in range(int(m[b]) + 1):
+                emitted += 1
+                self._accept_token(b, req, int(g[b, j]))
+                if req.done:
+                    break
+        self.stats["decode_tokens"] += emitted
+
+        self._report_tick_writes(slots_now, write_pos)
         if self.detectors is not None:
-            writes = []
+            entries = []
             for b, req in enumerate(slots_now):
-                pos = int(write_pos[b])
-                if self.paged:
-                    # idle slots write NOTHING in the paged layout — the
-                    # scatter dropped their store, so there is no event;
-                    # a slot that just finished freed its pages (site
-                    # lookup comes back unmapped) and is skipped too
-                    if req is None:
-                        continue
-                    page, off = self.kv.site(b, pos)
-                    if page < 0:
-                        continue
-                else:
-                    page, off = b, pos
-                writes.append(SlotWrite(b, req.rid if req is not None
-                                        else None, req is not None, pos,
-                                        page=page, offset=off))
-            self.detectors.on_step(self.step_no, writes, self._peek)
+                if req is None or not active[b]:
+                    continue
+                pos0 = int(write_pos[b])
+                # draft rows attributed to the drafter this tick: every
+                # PROPOSED row in overwrite mode (so the fraction is
+                # exactly 1 - accept-rate), only the accepted prefix
+                # under rollback. Overwrite also stores the fixed-width
+                # window's padding rows past dlen — dead too, but not
+                # the drafter's waste, so they stay out of this site
+                n_written = int(m[b]) if self.spec_rollback \
+                    else int(dlen[b])
+                sites = []
+                for j in range(1, n_written + 1):
+                    pos = pos0 + j
+                    if self.paged:
+                        page, off = self.kv.site(b, pos)
+                        if page < 0:
+                            continue
+                    else:
+                        if pos >= self.max_len:
+                            continue
+                        page, off = b, pos
+                    sites.append((page, off, j > int(m[b])))
+                entries.append(VerifyWrite(b, req.rid, int(m[b]), sites))
+            self.detectors.on_verify(self.step_no, entries)
 
     def step(self) -> None:
         """One scheduler step: admit into free slots, then one decode
@@ -366,12 +520,20 @@ class ServeEngine:
     # ---------------------------- reporting ----------------------------
     def throughput(self) -> Dict[str, float]:
         s = self.stats
-        return {
+        out = {
             "prefill_tok_s": (s["prefill_tokens"] / s["prefill_s"]
                               if s["prefill_s"] else 0.0),
             "decode_tok_s": (s["decode_tokens"] / s["decode_s"]
                              if s["decode_s"] else 0.0),
         }
+        if self.spec:
+            out["draft_tok_s"] = (s["draft_proposed"] / s["draft_s"]
+                                  if s["draft_s"] else 0.0)
+            out["verify_tok_s"] = (s["verified_positions"] / s["verify_s"]
+                                   if s["verify_s"] else 0.0)
+            out["accept_rate"] = (s["draft_accepted"] / s["draft_proposed"]
+                                  if s["draft_proposed"] else 0.0)
+        return out
 
     def lowered_tick(self):
         """Lowered decode tick (Tier-2 HLO waste analysis subject)."""

@@ -177,6 +177,101 @@ def decode_paged_attention_sharded(q, k_new, v_new, ck, cv, pt, idx, *,
     return fn(q, k_new, v_new, ck, cv, pt, idx)
 
 
+def verify_paged_attention_sharded(q, k_new, v_new, ck, cv, pt, idx, *,
+                                   mesh, batch_axes: Tuple[str, ...],
+                                   seq_axes: Tuple[str, ...]):
+    """Width-k speculative verify over a block-paged KV pool.
+
+    The width-W generalization of `decode_paged_attention_sharded`
+    (LM.verify's sharded fast path): q: (B,W,Hq,D) queries at logical
+    positions idx[b]..idx[b]+W-1; k_new/v_new: (B,W,Hkv,D) the window's
+    K/V; ck/cv: (P,page,Hkv,D) pool sharded in page chunks over
+    `seq_axes`; pt: (B,M) page table; idx: (B,) per-slot window starts
+    (negative = idle, stores drop). Each shard scatters the window rows
+    whose pages it owns, gathers its owned pages into the logical view,
+    masks per QUERY (position idx+i attends pos <= idx+i — the in-window
+    causal chain), and partials combine with the same pmax+psum flash
+    reduction. Returns (out (B,W,Hq,D), new_ck, new_cv)."""
+    P, ps = ck.shape[0], ck.shape[1]
+    B, W = q.shape[0], q.shape[1]
+    Hq, D = q.shape[2], q.shape[3]
+    Hkv = ck.shape[2]
+    G = Hq // Hkv
+    M = pt.shape[1]
+    n_seq = int(np.prod([mesh.shape[a] for a in seq_axes]))
+    chunk = P // n_seq                 # pages per shard
+    scale = 1.0 / np.sqrt(D)
+
+    b = batch_axes if batch_axes else None
+    q_spec = PS(b, None, None, None)
+    pool_spec = PS(seq_axes, None, None, None)
+    pt_spec = PS(b, None)
+    idx_spec = PS(b)
+
+    def local(q_l, kn, vn, ck_l, cv_l, pt_l, idx_l):
+        f32 = jnp.float32
+        off = _axis_index(seq_axes, mesh) * chunk
+        Bl = pt_l.shape[0]
+        # -- store: route every window row through the page table; only
+        # the shard owning the target page writes, everything else drops
+        pos = idx_l[:, None] + jnp.arange(W)[None, :]        # (B', W)
+        pi = jnp.floor_divide(pos, ps)
+        page = jnp.where(
+            (pi >= 0) & (pi < M),
+            jnp.take_along_axis(pt_l, jnp.clip(pi, 0, M - 1), axis=1), -1)
+        lp = page - off
+        own_w = (page >= 0) & (lp >= 0) & (lp < chunk) & (pos >= 0)
+        flat = jnp.where(own_w, lp * ps + jnp.remainder(pos, ps),
+                         chunk * ps)
+
+        def scat(pool, new):
+            fp = pool.reshape((chunk * ps,) + pool.shape[2:])
+            fp = fp.at[flat.reshape(-1)].set(
+                new.reshape((-1,) + new.shape[2:]).astype(pool.dtype),
+                mode="drop")
+            return fp.reshape(pool.shape)
+        ck_n = scat(ck_l, kn)
+        cv_n = scat(cv_l, vn)
+
+        # -- gather: the slot's logical view from locally-owned pages
+        lpt = pt_l - off                                     # (B', M)
+        owned = (pt_l >= 0) & (lpt >= 0) & (lpt < chunk)
+        kg = jnp.take(ck_n, jnp.clip(lpt, 0, chunk - 1), axis=0)
+        vg = jnp.take(cv_n, jnp.clip(lpt, 0, chunk - 1), axis=0)
+        kg = kg.reshape(Bl, M * ps, Hkv, D)
+        vg = vg.reshape(Bl, M * ps, Hkv, D)
+        kpos = jnp.arange(M * ps)
+        # per-query validity: query i at logical pos idx+i sees owned
+        # positions <= idx+i (committed history + window rows <= i)
+        valid = (jnp.repeat(owned, ps, axis=1)[:, None, :]
+                 & (kpos[None, None, :] <= pos[:, :, None]))  # (B',W,Skv)
+
+        # -- local partial attention + flash-decoding combine
+        qg = q_l.reshape(Bl, W, Hkv, G, D)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kg.astype(q_l.dtype),
+                       preferred_element_type=f32) * scale
+        s = jnp.where(valid[:, None, None, :, :], s, -1e30)
+        m = jnp.max(s, axis=-1)                              # (b,h,g,q)
+        p = jnp.exp(s - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vg.astype(q_l.dtype),
+                       preferred_element_type=f32)
+        gm = jax.lax.pmax(m, seq_axes)
+        corr = jnp.exp(m - gm)
+        l = jax.lax.psum(l * corr, seq_axes)
+        o = jax.lax.psum(o * jnp.moveaxis(corr, 3, 1)[..., None],
+                         seq_axes)
+        lq = jnp.moveaxis(l, 3, 1)                           # (b,q,h,g)
+        out = (o / jnp.maximum(lq, 1e-30)[..., None]).astype(q_l.dtype)
+        return out.reshape(Bl, W, Hq, D), ck_n, cv_n
+
+    fn = shard_map(local, mesh,
+                   (q_spec, q_spec, q_spec, pool_spec, pool_spec,
+                    pt_spec, idx_spec),
+                   (q_spec, pool_spec, pool_spec))
+    return fn(q, k_new, v_new, ck, cv, pt, idx)
+
+
 def cross_attention_sharded(q, ck, cv, *, mesh, batch_axes, seq_axes):
     """Read-only sharded cross-attention (precomputed KV, e.g. encoder out
     or image tokens). Same combine, no update."""

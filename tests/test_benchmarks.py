@@ -1,0 +1,58 @@
+"""Benchmark smoke: every row `benchmarks/overhead.py` can emit runs
+once at toy sizes. PR 3's `serve_paged_*` rows silently bit-rotted once
+because nothing executed them in CI — a renamed engine kwarg or stats
+key now fails here instead of vanishing from the report."""
+import importlib.util
+import math
+import os
+
+_BENCH = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                      "overhead.py")
+
+EXPECTED_ROWS = {
+    "overhead.native_step",
+    "overhead.tier3_step",
+    "overhead.tier1_p1000",
+    "overhead.tier1_p5000",
+    "overhead.tier1_p10000",
+    "overhead.tier1_reinterp_e8",
+    "overhead.tier1_replay_e8",
+    "overhead.serve_prefill_tokenloop",
+    "overhead.serve_prefill_batched",
+    "overhead.serve_decode_step",
+    "overhead.serve_tier3_step",
+    "overhead.serve_paged_decode_step",
+    "overhead.serve_paged_tier3_step",
+    "overhead.serve_paged_prefill_hit",
+    "overhead.serve_spec_plain_decode",
+    "overhead.serve_spec_oracle_decode",
+    "overhead.serve_spec_ngram_decode",
+    "overhead.serve_spec_rollback_decode",
+}
+
+
+def _load_overhead():
+    spec = importlib.util.spec_from_file_location("bench_overhead", _BENCH)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_every_overhead_row_runs_at_toy_sizes():
+    mod = _load_overhead()
+    rows = mod.run(toy=True)
+    names = [r[0] for r in rows]
+    assert len(names) == len(set(names)), "duplicate benchmark row names"
+    missing = EXPECTED_ROWS - set(names)
+    extra = set(names) - EXPECTED_ROWS
+    assert not missing, f"benchmark rows vanished: {sorted(missing)}"
+    assert not extra, (f"new rows {sorted(extra)}: add them to "
+                       f"EXPECTED_ROWS so CI keeps executing them")
+    for name, value, note in rows:
+        assert isinstance(value, float) and value > 0 \
+            and math.isfinite(value), (name, value)
+        assert isinstance(note, str) and note, (name, note)
+    # the replay row must still certify profile identity at toy sizes
+    replay = next(note for name, _, note in rows
+                  if name == "overhead.tier1_replay_e8")
+    assert "identical=True" in replay

@@ -11,7 +11,8 @@ from repro.core.events import approx_equal, silent_mask
 from repro.core.findings import Finding, WasteProfile, merge
 from repro.core.hlo_waste import analyze_waste
 from repro.core.interpreter import profile_fn
-from repro.core.report import dump_json, load_json, merge_reports
+from repro.core.report import (dump_json, load_json, merge_reports,
+                               merge_shards)
 
 CFG = ProfilerConfig(enabled=True, period=20, num_watchpoints=4)
 
@@ -166,3 +167,83 @@ def test_silent_mask_matches_scalar_helper():
     mask = np.asarray(silent_mask(a, b, 0.01))
     want = [approx_equal(x, y, 0.01) for x, y in zip(a, b)]
     assert mask.tolist() == want
+
+
+# ----------------------------------------------------------------------
+# Merge fuzz: §5.6 must be an honest commutative monoid, NaN included
+# ----------------------------------------------------------------------
+def _random_profile(rng) -> WasteProfile:
+    """A random shard/tier/epoch profile. Finding meta is a function of
+    the coalescing key (as in real detectors: meta describes the site),
+    so merge order cannot leak through meta's first-wins rule."""
+    kinds = ("dead_store", "silent_store", "silent_load",
+             "rejected_draft_store", "silent_prefix_load")
+    tier = int(rng.choice([1, 2, 3]))
+    p = WasteProfile(tier=tier,
+                     sampling_period=int(rng.choice([1, 100, 5000])))
+    for _ in range(rng.randint(0, 7)):
+        kind = kinds[rng.randint(len(kinds))]
+        c1 = (f"site{rng.randint(3)}", f"fn{rng.randint(2)}")
+        c2 = (f"ctx{rng.randint(3)}",)
+        frac = float("nan") if rng.randint(4) == 0 \
+            else float(0.25 * rng.randint(5))
+        nbytes = float("nan") if rng.randint(6) == 0 \
+            else float(rng.randint(0, 1 << 20))
+        p.add(Finding(kind=kind, tier=tier, c1=c1, c2=c2,
+                      count=int(rng.randint(1, 5)), bytes=nbytes,
+                      flops=float(rng.randint(0, 100)), fraction=frac,
+                      step=int(rng.randint(-1, 50)),
+                      meta={"site": f"{kind}@{c1[0]}"}))
+    for _ in range(rng.randint(0, 8)):
+        p.observe(kinds[rng.randint(len(kinds))], bool(rng.randint(2)))
+    for key in ("store_events", "load_bytes"):
+        if rng.randint(2):
+            p.bump_total(key, int(rng.randint(0, 10000)))
+    if rng.randint(2):
+        p.watchpoint_stats["store"] = {"armed": int(rng.randint(10)),
+                                       "traps": int(rng.randint(10))}
+    return p
+
+
+from _hypo import given, settings, st  # noqa: E402
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_merge_shards_fuzz_associative_commutative_roundtrip(seed):
+    """Random shard profiles (NaN-bearing findings included): merge is
+    associative and commutative, merge_shards never mutates its inputs,
+    and every profile survives a JSON round-trip losslessly. Profiles
+    compare via their canonical JSON (sorted findings/keys) so NaN —
+    which breaks == — still compares representation-exactly; this
+    caught Python max()'s order-dependence under NaN in
+    Finding.absorb."""
+    rng = np.random.RandomState(seed)
+    a, b, c = (_random_profile(rng) for _ in range(3))
+    snap = [x.to_json() for x in (a, b, c)]
+
+    ab_c = merge(merge(a, b), c).to_json()
+    a_bc = merge(a, merge(b, c)).to_json()
+    assert ab_c == a_bc                          # associative
+    assert merge(a, b).to_json() == merge(b, a).to_json()   # commutative
+    assert merge_shards([a, b, c]).to_json() == ab_c
+    assert [x.to_json() for x in (a, b, c)] == snap   # inputs untouched
+
+    for x in (a, b, c, merge_shards([a, b, c])):
+        back = WasteProfile.from_json(x.to_json())
+        assert back.to_json() == x.to_json()     # lossless round-trip
+
+
+def test_absorb_nan_fraction_is_order_independent():
+    """The deterministic core of the fuzz above: coalescing a NaN
+    fraction with a real one must not depend on arrival order (Python's
+    max(nan, x) is nan but max(x, nan) is x — the non-NaN value wins
+    now)."""
+    def f(frac):
+        return Finding(kind="dead_store", tier=1, c1=("a",), c2=("b",),
+                       fraction=frac)
+    p1, p2 = WasteProfile(tier=1), WasteProfile(tier=1)
+    p1.add(f(float("nan"))); p1.add(f(0.5))
+    p2.add(f(0.5)); p2.add(f(float("nan")))
+    assert p1.to_json() == p2.to_json()
+    assert p1.findings[0].fraction == 0.5

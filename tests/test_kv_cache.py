@@ -77,6 +77,66 @@ def test_paged_kv_invariants_under_random_schedule(seed):
     assert kv.alloc.free_count == kv.alloc.num_pages   # no leak
 
 
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_prefix_index_safe_under_digest_collisions_and_pressure(seed):
+    """Adversarial digests (a 3-bucket hash, so distinct prompts collide
+    constantly) + pool pressure: whatever the index believes about
+    content, its memory discipline must hold after every operation —
+    no pinned page is ever evicted out from under an entry, and no
+    entry ever maps a page that returned to the free list."""
+    import repro.serve.kv_cache as kvmod
+    real_digest = kvmod._digest
+    kvmod._digest = lambda tokens: f"weak{int(np.sum(tokens)) % 3}"
+    try:
+        rng = np.random.RandomState(seed)
+        ps, slots = 4, 3
+        kv = PagedKV(slots, ps, num_pages=10, max_pages_per_slot=4,
+                     prefix_window=3)
+        live = set()
+
+        def audit():
+            free = set(kv.alloc._free)
+            for e in kv.index._entries.values():
+                for p in e.pages:
+                    assert p not in free, "pinned page on the free list"
+                    assert kv.alloc.refcount[p] > 0, \
+                        "index entry maps a refless page"
+            kv.check()
+
+        for _ in range(50):
+            op = rng.randint(4)
+            free_slots = [b for b in range(slots) if b not in live]
+            if op == 0 and free_slots:
+                b = int(rng.choice(free_slots))
+                toks = rng.randint(0, 9, size=rng.randint(2, 13)) \
+                    .astype(np.int32)
+                try:
+                    plan = kv.admit(b, toks, budget=int(rng.randint(1, 5)))
+                except (PoolExhausted, ValueError):
+                    audit()
+                    continue
+                kv.release(plan.cow_pins)
+                kv.register_prefix(b, toks)
+                live.add(b)
+            elif op == 1 and live:
+                b = int(rng.choice(sorted(live)))
+                kv.free_slot(b)
+                live.discard(b)
+            elif op == 2:
+                kv.index.evict_one(prefer_freeing=bool(rng.randint(2)))
+            elif op == 3 and len(kv.index) > 1:
+                kv.index.evict_one()
+            audit()
+        for b in sorted(live):
+            kv.free_slot(b)
+        kv.index.clear()
+        kv.check()
+        assert kv.alloc.free_count == kv.alloc.num_pages
+    finally:
+        kvmod._digest = real_digest
+
+
 def test_allocator_rejects_double_free_and_overcommit():
     a = PageAllocator(4)
     pages = a.alloc(4)

@@ -136,6 +136,26 @@ assert float(jnp.abs(pout[0] - pwant[0]).max()) < 1e-4
 assert float(jnp.abs(npk - rpk).max()) == 0.0   # idle-slot store dropped
 assert float(jnp.abs(npv - rpv).max()) == 0.0
 
+# --- width-k speculative verify == page-table-gathered reference -------
+from repro.serve.flash_decode import verify_paged_attention_sharded
+W = 3
+qw = jax.random.normal(jax.random.PRNGKey(9), (B, W, Hq, D))
+knw = jax.random.normal(jax.random.PRNGKey(10), (B, W, Hkv, D))
+vnw = jax.random.normal(jax.random.PRNGKey(11), (B, W, Hkv, D))
+vidx = jnp.array([13, -4], jnp.int32)           # slot 1 idle: stores drop
+with mesh:
+    vout, vpk, vpv = jax.jit(lambda *a: verify_paged_attention_sharded(
+        *a, mesh=mesh, batch_axes=("data",), seq_axes=("model",)))(
+        qw, knw, vnw, pk, pv, pt, vidx)
+wpk, wpv = paged_update(pk, pv, knw, vnw, pt, vidx)
+kg, valid = paged_gather(wpk, pt)
+vg, _ = paged_gather(wpv, pt)
+vwant = attention_ref(qw, kg, vg, causal=True, q_offset=vidx,
+                      kv_len=vidx + W, kv_valid=valid)
+assert float(jnp.abs(vout[0] - vwant[0]).max()) < 1e-4
+assert float(jnp.abs(vpk - wpk).max()) == 0.0
+assert float(jnp.abs(vpv - wpv).max()) == 0.0
+
 # --- mini dry-run lowering on an 8-device mesh -------------------------
 from repro.configs import registry
 from repro.configs.base import TrainConfig

@@ -1,0 +1,338 @@
+"""Speculative decoding: greedy outputs bit-identical across spec
+on/off for both KV layouts, the width-k verify forward against
+sequential decode, drafter units, rollback-vs-overwrite dead-store
+accounting (the detect→optimize acceptance criterion), and the
+self-speculation corpus on duplicated traffic."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import ProfilerConfig
+from repro.core.detectors import ServingDetectors
+from repro.models.zoo import build_model
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.spec import (LMDrafter, NGramDrafter, ReplayDrafter,
+                              make_drafter)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _model(arch="qwen3-1.7b"):
+    cfg = dataclasses.replace(registry.get_config(arch).smoke(),
+                              dtype="float32")
+    model = build_model(cfg)
+    return cfg, model, model.init(KEY)
+
+
+class GarbageDrafter:
+    """Proposes a constant wrong-ish token: high rejection pressure."""
+
+    def __init__(self, tok=7):
+        self.tok = tok
+
+    def observe(self, tokens):
+        pass
+
+    def propose(self, history, k):
+        return np.full(k, self.tok, np.int32)
+
+
+def _workload(cfg, n=4, seed=3):
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i, (plen, gen, arr) in enumerate(
+            [(8, 5, 0), (5, 7, 0), (7, 3, 1), (6, 6, 4)][:n]):
+        toks = rng.randint(0, cfg.vocab_size, size=plen).astype(np.int32)
+        reqs.append((f"q{i}", toks, gen, arr))
+    return reqs
+
+
+def _serve(model, params, reqs, *, kv="dense", drafter=None,
+           rollback=True, eos_id=None, max_len=32, detectors=None):
+    eng = ServeEngine(model, params, num_slots=2, max_len=max_len,
+                      kv_layout=kv, page_size=8, drafter=drafter,
+                      spec_k=3, spec_rollback=rollback, eos_id=eos_id,
+                      detectors=detectors)
+    for rid, toks, gen, arr in reqs:
+        eng.submit(Request(rid=rid, tokens=toks.copy(),
+                           max_new_tokens=gen, arrival=arr))
+    fin = eng.run(max_steps=400)
+    return {rid: fin[rid].generated for rid in fin}, eng
+
+
+# ----------------------------------------------------------------------
+# The acceptance criterion: spec on/off x dense/paged, identical outputs
+# ----------------------------------------------------------------------
+def test_spec_outputs_bit_identical_across_modes():
+    """Same staggered workload through plain decode and through every
+    speculative mode (dense overwrite, paged overwrite, paged rollback)
+    with both a perfect and a hostile drafter: every request's greedy
+    continuation must match token for token — the acceptance rule only
+    ever admits the tokens plain decode would have produced."""
+    cfg, model, params = _model()
+    reqs = _workload(cfg)
+    base, _ = _serve(model, params, reqs)
+    lm = LMDrafter(model, params)          # self-draft: accepts fully
+    cases = [("dense", lm, False), ("paged", lm, False),
+             ("paged", lm, True), ("dense", GarbageDrafter(), False),
+             ("paged", GarbageDrafter(), True)]
+    for kv, drafter, rollback in cases:
+        out, eng = _serve(model, params, reqs, kv=kv, drafter=drafter,
+                          rollback=rollback)
+        assert out == base, (kv, type(drafter).__name__, rollback)
+        assert eng.stats["spec_ticks"] > 0
+        if isinstance(drafter, LMDrafter):
+            # the target drafting for itself is always accepted, so the
+            # batch emits more than one token per verify tick
+            assert eng.stats["draft_accepted"] == eng.stats["draft_proposed"]
+            assert eng.stats["draft_accepted"] > 0
+        else:
+            # a hostile drafter is overwhelmingly rejected (a constant
+            # token can still luck into a greedy match) — and whatever
+            # it proposed never corrupted the output stream
+            assert (eng.stats["draft_accepted"]
+                    < eng.stats["draft_proposed"])
+
+
+def test_spec_bit_identical_with_eos_early_exit():
+    """EOS inside an accepted window must truncate exactly like plain
+    decode (no token after EOS is ever emitted)."""
+    cfg, model, params = _model()
+    reqs = _workload(cfg, n=2)
+    base, _ = _serve(model, params, reqs)
+    # the EOS id is a token plain decode actually emits mid-stream
+    eos = base["q0"][2]
+    base_eos, _ = _serve(model, params, reqs, eos_id=eos)
+    out, _ = _serve(model, params, reqs, eos_id=eos,
+                    drafter=LMDrafter(model, params), kv="paged")
+    assert out == base_eos
+    assert out["q0"][-1] == eos or len(out["q0"]) < len(base["q0"])
+
+
+# ----------------------------------------------------------------------
+# LM.verify against sequential decode (the model-layer contract)
+# ----------------------------------------------------------------------
+def test_verify_chain_matches_sequential_decode_dense_and_paged():
+    """One width-W verify call must reproduce W sequential greedy decode
+    steps: same greedy tokens at every window position, and (for the
+    committed prefix) the same cache-visible behaviour afterwards."""
+    cfg, model, params = _model()
+    B, P, W = 2, 6, 4
+    toks = np.asarray(jax.random.randint(KEY, (B, P), 0, cfg.vocab_size))
+    max_len = 24
+
+    # sequential greedy chain from the prefilled cache
+    cache = model.init_cache(params, B, max_len, kv_dtype=jnp.float32)
+    cache = model.with_cache_index(cache, jnp.zeros((B,), jnp.int32))
+    lg, cache = model.prefill(params, cache, jnp.asarray(toks),
+                              lengths=jnp.full((B,), P, jnp.int32))
+    cur = jnp.argmax(lg[:, P - 1:P], -1).astype(jnp.int32)
+    seq_cache = cache
+    chain = [np.asarray(cur[:, 0])]
+    for _ in range(W):
+        lg, seq_cache = model.decode_step(params, seq_cache, cur)
+        cur = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
+        chain.append(np.asarray(cur[:, 0]))
+    chain = np.stack(chain, 1)          # (B, W+1) greedy continuation
+
+    # verify the chain's first W tokens in ONE call: every draft is the
+    # true greedy token, so g must equal the chain shifted by one
+    window = jnp.asarray(chain[:, :W])
+    vlg, vcache = model.verify(params, cache, window)
+    g = np.asarray(jnp.argmax(vlg, -1))
+    np.testing.assert_array_equal(g, chain[:, 1:W + 1])
+
+
+def test_commit_verify_stores_exactly_the_accepted_prefix():
+    """Deferred verify + commit_verify(length=L) must leave the paged
+    pool bit-identical to the overwrite path's pool for rows < L, and
+    bit-identical to the PRE-verify pool everywhere else (rejected rows
+    never become stores)."""
+    cfg, model, params = _model()
+    B, P, W = 2, 6, 3
+    toks = np.asarray(jax.random.randint(KEY, (B, P), 0, cfg.vocab_size))
+    eng = ServeEngine(model, params, num_slots=B, max_len=24,
+                      kv_layout="paged", page_size=4)
+    for b in range(B):
+        eng.submit(Request(rid=f"r{b}", tokens=toks[b],
+                           max_new_tokens=8))
+    eng._admit()
+    cache0 = eng.cache
+    window = jnp.asarray(
+        np.asarray(jax.random.randint(jax.random.PRNGKey(5), (B, W), 0,
+                                      cfg.vocab_size), np.int32))
+    idx0 = model.cache_index(cache0)
+    # overwrite: all W rows land in the pool
+    _, over = model.verify(params, cache0, window, commit=True)
+    # defer + commit rows [0, L)
+    L = jnp.asarray([2, 0], jnp.int32)
+    _, defer = model.verify(params, cache0, window, commit=False)
+    committed = model.commit_verify(defer, idx0, L)
+
+    for name in committed["main"]:
+        ck = np.asarray(committed["main"][name]["k"])
+        ok = np.asarray(over["main"][name]["k"])
+        base = np.asarray(cache0["main"][name]["k"])
+        assert "win_k" not in committed["main"][name]
+        pt = np.asarray(cache0["main"][name]["pt"])[0]   # same per layer
+        idx = np.asarray(idx0)
+        ps = ck.shape[2]
+        for b in range(B):
+            for s in range(W):
+                pos = int(idx[b]) + s
+                page = pt[b][pos // ps]
+                row = (slice(None), page, pos % ps)
+                if s < int(L[b]):
+                    np.testing.assert_array_equal(ck[row], ok[row])
+                else:
+                    np.testing.assert_array_equal(ck[row], base[row])
+
+
+# ----------------------------------------------------------------------
+# Drafters
+# ----------------------------------------------------------------------
+def test_ngram_drafter_self_and_corpus_lookup():
+    d = NGramDrafter(max_n=3, min_n=2)
+    # self-speculation: the tail bigram (4, 5) occurred earlier; the
+    # drafter replays what followed it
+    hist = np.array([1, 2, 4, 5, 9, 8, 4, 5], np.int32)
+    np.testing.assert_array_equal(d.propose(hist, 2), [9, 8])
+    # corpus lookup: an unseen tail matches a served sequence
+    d.observe(np.array([7, 7, 3, 1, 2, 6], np.int32))
+    np.testing.assert_array_equal(
+        d.propose(np.array([50, 60, 7, 7], np.int32), 3), [3, 1, 2])
+    # no match -> no draft (never a fabricated token)
+    assert d.propose(np.array([100, 101], np.int32), 4).size == 0
+    assert d.propose(np.array([1], np.int32), 0).size == 0
+    # a tail-flush occurrence (no continuation) must not shadow an
+    # earlier occurrence that HAS one
+    d2 = NGramDrafter(max_n=3, min_n=2)
+    d2.observe(np.array([9, 9, 1, 2, 5, 1, 2], np.int32))
+    np.testing.assert_array_equal(
+        d2.propose(np.array([40, 41, 1, 2], np.int32), 3), [5, 1, 2])
+
+
+def test_replay_drafter_prefix_semantics():
+    d = ReplayDrafter([[1, 2, 3, 4, 5]])
+    np.testing.assert_array_equal(d.propose([1, 2, 3], 2), [4, 5])
+    assert d.propose([1, 2, 9], 2).size == 0
+    assert d.propose([1, 2, 3, 4, 5], 2).size == 0     # nothing left
+    assert make_drafter("ngram").propose([1, 2], 1).size == 0
+
+
+def test_ngram_corpus_duplicate_prompt_drafts_donor_continuation():
+    """Duplicated traffic drafts itself: after a donor request finishes,
+    a later duplicate of its prompt is drafted from the served corpus
+    and the verify forward accepts the donor's greedy continuation."""
+    cfg, model, params = _model()
+    rng = np.random.RandomState(11)
+    prompt = rng.randint(0, cfg.vocab_size, size=10).astype(np.int32)
+    reqs = [("donor", prompt, 6, 0), ("dup", prompt.copy(), 6, 8)]
+    out, eng = _serve(model, params, reqs, kv="paged",
+                      drafter=NGramDrafter(), max_len=40)
+    assert out["donor"] == out["dup"]
+    assert eng.stats["draft_accepted"] >= 1, eng.stats
+    tp = eng.throughput()
+    assert tp["accept_rate"] > 0
+
+
+def test_lm_drafter_same_model_accepts_everything():
+    """The target model drafting for itself is the acceptance rule's
+    fixed point: prefill is bit-identical to the token loop, so every
+    proposal equals the verify forward's greedy token."""
+    cfg, model, params = _model()
+    reqs = _workload(cfg, n=2)
+    out, eng = _serve(model, params, reqs,
+                      drafter=LMDrafter(model, params))
+    assert eng.stats["draft_proposed"] > 0
+    assert eng.stats["draft_accepted"] == eng.stats["draft_proposed"]
+    # multi-token ticks: fewer verify ticks than emitted decode tokens
+    assert eng.stats["spec_ticks"] < eng.stats["decode_tokens"]
+
+
+# ----------------------------------------------------------------------
+# The closed loop: rejected-draft dead stores measured, then eliminated
+# ----------------------------------------------------------------------
+def test_rollback_strictly_lowers_rejected_draft_dead_stores():
+    """ISSUE 4 acceptance: under a rejection-heavy drafter the overwrite
+    engine stores every rejected draft row (Def.-1 dead stores — the
+    `rejected_draft_store` fraction is high), while the rollback engine
+    never stores them (fraction 0) — with bit-identical outputs."""
+    cfg, model, params = _model()
+    reqs = _workload(cfg)
+
+    def run(rollback):
+        det = ServingDetectors(ProfilerConfig(enabled=True, seed=0),
+                               sites_per_step=2)
+        out, eng = _serve(model, params, reqs, kv="paged",
+                          drafter=GarbageDrafter(), rollback=rollback,
+                          detectors=det)
+        return out, det.report.fractions()
+
+    out_ow, fr_ow = run(False)
+    out_rb, fr_rb = run(True)
+    assert out_ow == out_rb
+    assert fr_ow["rejected_draft_store"] > 0.5, fr_ow
+    assert (fr_rb.get("rejected_draft_store", 0.0)
+            < fr_ow["rejected_draft_store"]), (fr_ow, fr_rb)
+
+
+def test_partial_accept_fraction_between_modes():
+    """A drafter that is right only sometimes: overwrite's dead-store
+    fraction sits strictly between 0 and 1 and rollback still reports
+    zero, while the outputs stay identical and some drafts land."""
+    cfg, model, params = _model()
+    rng = np.random.RandomState(11)
+    prompt = rng.randint(0, cfg.vocab_size, size=10).astype(np.int32)
+    reqs = [("donor", prompt, 6, 0), ("dup", prompt.copy(), 6, 8)]
+
+    class HalfOracle(NGramDrafter):
+        """Corpus-backed drafts with the last one corrupted: accepts
+        the prefix, rejects the tail."""
+
+        def propose(self, history, k):
+            d = super().propose(history, k)
+            if d.size:
+                d = d.copy()
+                d[-1] = (d[-1] + 1) % 50
+            return d
+
+    def run(rollback):
+        det = ServingDetectors(ProfilerConfig(enabled=True, seed=0))
+        out, eng = _serve(model, params, reqs, kv="paged",
+                          drafter=HalfOracle(), rollback=rollback,
+                          detectors=det, max_len=40)
+        return out, eng, det.report.fractions()
+
+    out_ow, eng_ow, fr_ow = run(False)
+    out_rb, eng_rb, fr_rb = run(True)
+    assert out_ow == out_rb
+    assert eng_ow.stats["draft_accepted"] >= 1
+    f = fr_ow.get("rejected_draft_store", 0.0)
+    assert 0.0 < f < 1.0, fr_ow
+    assert fr_rb.get("rejected_draft_store", 1.0) == 0.0, fr_rb
+
+
+def test_spec_stats_and_throughput_accounting():
+    """Emitted-token accounting stays honest under speculation: decode
+    tokens equal the plain run's, accepted+ticks bound the emissions,
+    and the accept-rate/draft/verify rates are exposed."""
+    cfg, model, params = _model()
+    reqs = _workload(cfg, n=2)
+    base, plain_eng = _serve(model, params, reqs)
+    out, eng = _serve(model, params, reqs,
+                      drafter=LMDrafter(model, params))
+    assert (eng.stats["decode_tokens"]
+            == plain_eng.stats["decode_tokens"])
+    # each verify tick emits at most 1 bonus token per slot on top of
+    # the accepted drafts
+    assert eng.stats["decode_tokens"] <= (
+        eng.stats["draft_accepted"]
+        + eng.stats["spec_ticks"] * eng.num_slots)
+    tp = eng.throughput()
+    for key in ("draft_tok_s", "verify_tok_s", "accept_rate"):
+        assert key in tp
+    assert tp["accept_rate"] == 1.0

@@ -165,3 +165,61 @@ def test_fault_monitor_restart_budget():
     clk.t = 10.0
     mon.heartbeat(0)
     assert mon.plan()["action"] == "abort"
+
+
+# ----------------------------------------------------------------------
+# Event-substrate determinism: stale-trap disarm under equal-address ties
+# ----------------------------------------------------------------------
+def _tie_engine_profile():
+    """Arm several same-address watchpoints at spread offsets, then trap
+    them with a SHORTER store at that (recycled) address: high-offset
+    watchpoints are stale (the watched element no longer exists) and
+    must disarm without classification; low-offset ones classify."""
+    from repro.configs.base import ProfilerConfig
+    from repro.core.events import EventEngine, MemEvent, STORE
+
+    eng = EventEngine(ProfilerConfig(enabled=True, period=1,
+                                     num_watchpoints=4, seed=0))
+    vals = np.arange(16.0, dtype=np.float32)
+    eng.on_event(MemEvent(kind=STORE, address=100, nelems=16, itemsize=4,
+                          values=vals, ctx=("writerA",)))
+    armed_before = [(w.offset, w.meta) for w in eng.wp[STORE].armed()]
+    eng.on_event(MemEvent(kind=STORE, address=100, nelems=8, itemsize=4,
+                          values=vals[:8], ctx=("writerB",)))
+    return eng, armed_before
+
+
+def test_stale_trap_disarm_deterministic_under_address_ties():
+    """Two identical event streams -> byte-identical profiles, and the
+    equal-address tie resolves the same way every run: every stale
+    watchpoint (offset past the shorter event) disarms unclassified, so
+    only the in-extent ones contribute checked counts."""
+    eng1, armed1 = _tie_engine_profile()
+    eng2, armed2 = _tie_engine_profile()
+    assert armed1 == armed2
+    assert eng1.finalize().to_json() == eng2.finalize().to_json()
+
+    prof = eng1.profile
+    in_extent = sum(1 for off, _ in armed1 if off < 8)
+    stale = sum(1 for off, _ in armed1 if off >= 8)
+    assert stale >= 1 and in_extent >= 1       # the tie is exercised
+    # stale watchpoints disarmed WITHOUT classification: only in-extent
+    # ones were checked against Defs. 1-2
+    assert (prof.checked.get("dead_store", 0)
+            + prof.checked.get("silent_store", 0)) == in_extent
+    # and nothing stayed armed at the recycled address
+    assert all(w.address != 100 or w.context != ("writerA",)
+               for w in eng1.wp["store"].armed())
+
+
+def test_tier3_leaf_addresses_stable_across_processes():
+    """Detector leaf addresses must not depend on PYTHONHASHSEED: the
+    seed-era hash(path) salted addresses per process, so equal-address
+    collisions — and trap/disarm behavior — varied run to run. crc32 is
+    process-independent and pinned here by value."""
+    import zlib
+    from repro.core.detectors import _leaf_event
+    leaf = jnp.zeros((4,), jnp.float32)
+    ev = _leaf_event("params.layer0.w", leaf)
+    assert ev.address == zlib.crc32(b"params.layer0.w") & 0x7FFFFFFF
+    assert ev.address == 307156108      # frozen: any drift is a break

@@ -1,0 +1,129 @@
+"""Diff two ``BENCH_<rev>.json`` artifacts inside a noise band.
+
+``overhead.py`` (run as a script) writes a versioned row-set snapshot:
+row names, µs-per-call, notes, machine info and the git rev it was
+measured at. This tool compares a current run against a committed
+baseline and fails (exit 1) when
+
+  * a baseline row is MISSING from the current run — the PR-3 bit-rot
+    failure mode (a renamed kwarg silently dropping a row from the
+    report), or
+  * a row got slower by more than the noise band (default 2.0x — CI
+    runners are shared machines; the band is deliberately wide so only
+    step-function regressions trip, not scheduler jitter).
+
+New rows in the current run are reported but never fail the diff: the
+exact-manifest check lives in tests/test_benchmarks.py EXPECTED_ROWS,
+which forces them to be registered.
+
+Usage::
+
+    python benchmarks/bench_diff.py BASELINE.json CURRENT.json [--band 2.0]
+    python benchmarks/bench_diff.py --latest CURRENT.json
+
+``--latest`` picks the newest committed ``BENCH_*.json`` in this
+directory (by git log order, falling back to mtime) as the baseline —
+what the CI bench-diff job uses. Exit 0 with a notice when no baseline
+exists yet (first run on a fresh branch must not fail).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != 1:
+        raise SystemExit(f"{path}: unknown schema {doc.get('schema')!r}")
+    return doc
+
+
+def latest_committed() -> str | None:
+    """Newest BENCH_*.json tracked in git (commit order), else mtime."""
+    cands = sorted(glob.glob(os.path.join(HERE, "BENCH_*.json")))
+    if not cands:
+        return None
+    try:
+        out = subprocess.check_output(
+            ["git", "log", "--format=%H", "--name-only", "--diff-filter=AM",
+             "--", "benchmarks/BENCH_*.json"],
+            cwd=HERE, text=True, stderr=subprocess.DEVNULL)
+        for line in out.splitlines():
+            line = line.strip()
+            if line.startswith("benchmarks/BENCH_") and line.endswith(".json"):
+                p = os.path.join(HERE, os.path.basename(line))
+                if os.path.exists(p):
+                    return p
+    except Exception:
+        pass
+    return max(cands, key=os.path.getmtime)
+
+
+def diff(base: dict, cur: dict, band: float) -> int:
+    brows = {r["name"]: r for r in base["rows"]}
+    crows = {r["name"]: r for r in cur["rows"]}
+    if base.get("toy") != cur.get("toy"):
+        print(f"note: comparing toy={base.get('toy')} baseline against "
+              f"toy={cur.get('toy')} run — ratios are not size-for-size")
+    rc = 0
+    missing = sorted(set(brows) - set(crows))
+    if missing:
+        print(f"FAIL: rows missing from current run: {missing}")
+        rc = 1
+    for name in sorted(set(crows) - set(brows)):
+        print(f"new row (not in baseline): {name}")
+    width = max((len(n) for n in brows), default=0)
+    for name in sorted(set(brows) & set(crows)):
+        b, c = brows[name]["us_per_call"], crows[name]["us_per_call"]
+        ratio = c / b if b > 0 else float("inf")
+        tag = "ok"
+        if ratio > band:
+            tag = f"REGRESSION (> {band:.2f}x band)"
+            rc = 1
+        elif ratio < 1.0 / band:
+            tag = "improved"
+        print(f"{name:<{width}}  {b:>12.1f} -> {c:>12.1f} us  "
+              f"{ratio:>6.2f}x  {tag}")
+    print(f"baseline rev={base.get('rev')} current rev={cur.get('rev')} "
+          f"band={band:.2f}x -> {'FAIL' if rc else 'OK'}")
+    return rc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="+", metavar="JSON",
+                    help="BASELINE CURRENT, or just CURRENT with --latest")
+    ap.add_argument("--band", type=float, default=2.0,
+                    help="noise band: fail when current > band * baseline")
+    ap.add_argument("--latest", action="store_true",
+                    help="baseline = newest committed benchmarks/"
+                         "BENCH_*.json")
+    args = ap.parse_args(argv)
+    if args.latest:
+        if len(args.files) != 1:
+            ap.error("--latest takes exactly one file (the current run)")
+        base_path, cur_path = latest_committed(), args.files[0]
+        if base_path is None:
+            print("no committed BENCH_*.json baseline yet — nothing to "
+                  "diff (ok)")
+            return 0
+    else:
+        if len(args.files) != 2:
+            ap.error("need BASELINE and CURRENT (or --latest CURRENT)")
+        base_path, cur_path = args.files
+    if os.path.abspath(base_path) == os.path.abspath(cur_path):
+        print("baseline and current are the same file — nothing to diff")
+        return 0
+    return diff(load(base_path), load(cur_path), args.band)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -52,4 +52,70 @@ def run():
     t3 = _time(jax.jit(lambda: ref.silent_compare_ref(a, b, 0.0)))
     rows.append(("kernel.silent_compare", t3 * 1e6,
                  f"kernel=={cnt_k}|ref=={cnt_r}|match={cnt_k == cnt_r}"))
+    rows.extend(run_paged())
+    return rows
+
+
+def run_paged():
+    """Paged serving kernels at bench sizes (larger pool/table than the
+    CI toy rows in overhead.run_kernels): interpret-mode parity vs the
+    ref composition + the modeled HBM-byte ratio at these sizes."""
+    from repro.kernels.flash_prefill import paged_window_attention
+    from repro.kernels.paged_attention import paged_decode_attention
+    from repro.launch.roofline import ideal_paged_attention_bytes
+
+    rows = []
+    B, Hq, Hkv, D, ps, M = 4, 8, 4, 64, 16, 16
+    rng = np.random.RandomState(7)
+    pool_pages = B * M + 4
+    pool_k = jnp.asarray(rng.randn(pool_pages, ps, Hkv, D), jnp.float32)
+    pool_v = jnp.asarray(rng.randn(pool_pages, ps, Hkv, D), jnp.float32)
+    pt = np.asarray(
+        rng.permutation(pool_pages - 1)[:B * M].reshape(B, M), np.int32)
+    idx = np.zeros(B, np.int32)
+    for b in range(B):
+        used = rng.randint(M // 2, M)
+        pt[b, used:] = -1
+        idx[b] = used * ps - rng.randint(1, ps)
+    pt, idx = jnp.asarray(pt), jnp.asarray(idx)
+    mapped = int((np.asarray(pt) >= 0).sum())
+
+    q1 = jnp.asarray(rng.randn(B, 1, Hq, D), jnp.float32)
+    kn = jnp.asarray(rng.randn(B, 1, Hkv, D), jnp.float32)
+    vn = jnp.asarray(rng.randn(B, 1, Hkv, D), jnp.float32)
+
+    def decode_ref():
+        ck, cv = ref.paged_update(pool_k, pool_v, kn, vn, pt, idx)
+        gk, valid = ref.paged_gather(ck, pt)
+        gv, _ = ref.paged_gather(cv, pt)
+        return ref.attention_ref(q1, gk, gv, causal=True, q_offset=idx,
+                                 kv_len=idx + 1, kv_valid=valid)
+    want = decode_ref()
+    got, _, _ = paged_decode_attention(q1, kn, vn, pool_k, pool_v, pt, idx,
+                                       interpret=True)
+    err = float(jnp.abs(want - got).max())
+    kwargs = dict(batch=B, q_len=1, mapped_pages=mapped, max_pages=M,
+                  page_size=ps, num_heads=Hq, num_kv_heads=Hkv, head_dim=D,
+                  kv_bytes=4.0, act_bytes=4.0)
+    hbm = (ideal_paged_attention_bytes(materialize=True, **kwargs)
+           / ideal_paged_attention_bytes(materialize=False, **kwargs))
+    t = _time(jax.jit(decode_ref))
+    rows.append(("kernel.paged_decode", t * 1e6,
+                 f"max_err_vs_ref={err:.2e}|modeled_hbm_speedup={hbm:.2f}x"))
+
+    S = 2 * ps
+    qw = jnp.asarray(rng.randn(B, S, Hq, D), jnp.float32)
+    kw = jnp.asarray(rng.randn(B, S, Hkv, D), jnp.float32)
+    vw = jnp.asarray(rng.randn(B, S, Hkv, D), jnp.float32)
+    ow, _, cw, pk1, pv1 = paged_window_attention(
+        qw, kw, vw, pool_k, pool_v, pt, idx, store=True, interpret=True)
+    owr, pk1r, pv1r, cwr = ref.paged_window_ref(
+        qw, kw, vw, pool_k, pool_v, pt, idx, store=True, tol=0.0)
+    werr = float(jnp.abs(ow - owr).max())
+    ok = bool(jnp.array_equal(pk1, pk1r) and jnp.array_equal(pv1, pv1r)
+              and jnp.array_equal(cw, cwr))
+    t_w = _time(jax.jit(lambda: ref.paged_window_ref(
+        qw, kw, vw, pool_k, pool_v, pt, idx, store=True, tol=0.0)[0]))
+    rows.append(("kernel.paged_window", t_w * 1e6,
+                 f"max_err_vs_ref={werr:.2e}|pool_and_counters_match={ok}"))
     return rows

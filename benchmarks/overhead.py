@@ -16,10 +16,20 @@ Every row can also run at toy sizes (``run(toy=True)``) — the CI smoke
 (`tests/test_benchmarks.py`) executes the full row set once so a broken
 row (the PR-3 `serve_paged_*` bit-rot failure mode) fails loudly
 instead of silently vanishing from the report.
+
+Run as a script (``python benchmarks/overhead.py [--toy]``) the row set
+is also written to ``benchmarks/BENCH_<git-rev>.json`` with machine
+info, so successive revisions leave comparable artifacts;
+``benchmarks/bench_diff.py`` diffs two such files inside a noise band
+(the CI bench-diff job runs it against the latest committed baseline).
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -117,7 +127,178 @@ def run(toy: bool = False):
                  f"speedup={t_re/t_rp:.1f}x|identical={identical}"))
     rows.extend(run_serve(toy))
     rows.extend(run_spec(toy))
+    rows.extend(run_kernels(toy))
     return rows
+
+
+def run_kernels(toy: bool = False):
+    """Pallas serving-kernel tier: paged decode / fused prefill / fused
+    width-k verify against the reference scatter-gather-mask
+    compositions, on a hostile page table (out-of-order pages, partially
+    filled last page).
+
+    Wall time on CPU runs the kernels in *interpret mode* (a Python
+    emulation, orders of magnitude slower than the compiled TPU kernel)
+    so the honest speed number is the modeled HBM-byte ratio from
+    ``roofline.ideal_paged_attention_bytes``: reference path = gather
+    materialization (view write + read-back), kernel path = page-granular
+    in-kernel gather. The notes also carry the parity/counter checks so
+    a silently-diverging kernel fails the CI row smoke."""
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+    from repro.kernels.flash_prefill import paged_window_attention
+    from repro.kernels.paged_attention import paged_decode_attention
+    from repro.launch.roofline import ideal_paged_attention_bytes
+
+    rows = []
+    interp = kops._pallas_interpret()
+    if toy:
+        B, Hq, Hkv, D, ps, M = 2, 4, 2, 16, 8, 4
+    else:
+        B, Hq, Hkv, D, ps, M = 4, 8, 4, 32, 16, 8
+    rng = np.random.RandomState(0)
+    pool_pages = B * M + 2
+    pool_k = jnp.asarray(rng.randn(pool_pages, ps, Hkv, D), jnp.float32)
+    pool_v = jnp.asarray(rng.randn(pool_pages, ps, Hkv, D), jnp.float32)
+    # hostile table: out-of-order pages per slot, partially filled last
+    # page (idx not a page multiple), unmapped tail entries
+    perm = rng.permutation(pool_pages - 1)[:B * M].reshape(B, M)
+    pt = np.asarray(perm, np.int32)
+    idx = np.zeros(B, np.int32)
+    for b in range(B):
+        used = rng.randint(1, M)                # pages actually holding rows
+        pt[b, used:] = -1
+        idx[b] = used * ps - rng.randint(1, ps)  # partial last page
+    pt = jnp.asarray(pt)
+    idx = jnp.asarray(idx)
+    mapped = int((np.asarray(pt) >= 0).sum())
+
+    q1 = jnp.asarray(rng.randn(B, 1, Hq, D), jnp.float32)
+    kn = jnp.asarray(rng.randn(B, 1, Hkv, D), jnp.float32)
+    vn = jnp.asarray(rng.randn(B, 1, Hkv, D), jnp.float32)
+
+    def decode_ref(q, k_new, v_new, ck, cv, pt, idx):
+        cnt = kref.paged_store_counts(ck, cv, k_new, v_new, pt, idx,
+                                      tol=kops.COUNTER_TOL)
+        ck, cv = kref.paged_update(ck, cv, k_new, v_new, pt, idx)
+        gk, valid = kref.paged_gather(ck, pt)
+        gv, _ = kref.paged_gather(cv, pt)
+        out = kref.attention_ref(q, gk, gv, causal=True, q_offset=idx,
+                                 kv_len=idx + 1, kv_valid=valid)
+        return out, cnt
+
+    j_ref = jax.jit(decode_ref)
+    j_pal = jax.jit(partial(paged_decode_attention, interpret=interp))
+    o_ref, c_ref = j_ref(q1, kn, vn, pool_k, pool_v, pt, idx)
+    o_pal, _, c_pal = j_pal(q1, kn, vn, pool_k, pool_v, pt, idx)
+    err = float(jnp.max(jnp.abs(o_ref - o_pal)))
+    cnt_ok = bool(jnp.array_equal(c_ref, c_pal))
+    n_t = 2 if toy else 3
+    t_ref = _time(lambda: jax.block_until_ready(
+        j_ref(q1, kn, vn, pool_k, pool_v, pt, idx)), n=n_t)
+    t_pal = _time(lambda: jax.block_until_ready(
+        j_pal(q1, kn, vn, pool_k, pool_v, pt, idx)), n=n_t)
+    kwargs = dict(batch=B, q_len=1, mapped_pages=mapped, max_pages=M,
+                  page_size=ps, num_heads=Hq, num_kv_heads=Hkv,
+                  head_dim=D, kv_bytes=4.0, act_bytes=4.0)
+    hbm = (ideal_paged_attention_bytes(materialize=True, **kwargs)
+           / ideal_paged_attention_bytes(materialize=False, **kwargs))
+    rows.append(("overhead.kernel_paged_decode_ref", t_ref * 1e6,
+                 "baseline (gather materialization)"))
+    rows.append(("overhead.kernel_paged_decode_pallas", t_pal * 1e6,
+                 f"modeled_hbm_speedup={hbm:.2f}x|max_err={err:.1e}"
+                 f"|counters_match={cnt_ok}"
+                 + ("|interpret" if interp else "")))
+
+    # fused prefill: window store into an EMPTY slot region (the admit
+    # path), ref = paged_window_ref
+    S = ps if toy else 2 * ps
+    qw = jnp.asarray(rng.randn(B, S, Hq, D), jnp.float32)
+    kw = jnp.asarray(rng.randn(B, S, Hkv, D), jnp.float32)
+    vw = jnp.asarray(rng.randn(B, S, Hkv, D), jnp.float32)
+    pt0 = np.full((B, M), -1, np.int32)
+    need = -(-S // ps)
+    pt0[:, :need] = rng.permutation(pool_pages - 1)[:B * need].reshape(B, need)
+    pt0 = jnp.asarray(pt0)
+    idx0 = jnp.zeros(B, jnp.int32)
+    j_pw = jax.jit(partial(paged_window_attention, store=True,
+                           interpret=interp))
+    j_pw_ref = jax.jit(partial(kref.paged_window_ref, store=True,
+                               tol=kops.COUNTER_TOL))
+    ow, _, cw, pk1, pv1 = j_pw(qw, kw, vw, pool_k, pool_v, pt0, idx0)
+    owr, pk1r, pv1r, cwr = j_pw_ref(qw, kw, vw, pool_k, pool_v, pt0, idx0)
+    perr = float(jnp.max(jnp.abs(ow - owr)))
+    pool_ok = bool(jnp.array_equal(pk1, pk1r) and jnp.array_equal(pv1, pv1r))
+    pcnt_ok = bool(jnp.array_equal(cw, cwr))
+    t_pw = _time(lambda: jax.block_until_ready(
+        j_pw(qw, kw, vw, pool_k, pool_v, pt0, idx0)), n=n_t)
+    rows.append(("overhead.kernel_prefill_pallas", t_pw * 1e6,
+                 f"max_err={perr:.1e}|pool_equal={pool_ok}"
+                 f"|counters_match={pcnt_ok}"))
+
+    # fused width-(k+1) verify on the populated hostile table: store mode
+    # (overwrite) parity + defer mode must count zero stores
+    K1 = 4
+    qv = jnp.asarray(rng.randn(B, K1, Hq, D), jnp.float32)
+    kv = jnp.asarray(rng.randn(B, K1, Hkv, D), jnp.float32)
+    vv = jnp.asarray(rng.randn(B, K1, Hkv, D), jnp.float32)
+    ov, _, cv_, _, _ = j_pw(qv, kv, vv, pool_k, pool_v, pt, idx)
+    ovr, _, _, cvr = j_pw_ref(qv, kv, vv, pool_k, pool_v, pt, idx)
+    verr = float(jnp.max(jnp.abs(ov - ovr)))
+    vcnt_ok = bool(jnp.array_equal(cv_, cvr))
+    j_defer = jax.jit(partial(paged_window_attention, store=False,
+                              interpret=interp))
+    _, _, cd, _, _ = j_defer(qv, kv, vv, pool_k, pool_v, pt, idx)
+    defer_ok = bool(jnp.all(cd == 0))
+    t_v = _time(lambda: jax.block_until_ready(
+        j_pw(qv, kv, vv, pool_k, pool_v, pt, idx)), n=n_t)
+    rows.append(("overhead.kernel_verify_pallas", t_v * 1e6,
+                 f"max_err={verr:.1e}|counters_match={vcnt_ok}"
+                 f"|defer_zero_stores={defer_ok}"))
+    return rows
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            text=True).strip()
+    except Exception:
+        return "unknown"
+
+
+def _machine_info() -> dict:
+    import platform
+    return {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "cpu_count": os.cpu_count(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+    }
+
+
+def emit_json(rows, toy: bool, path: str = None) -> str:
+    """Write the row set to ``BENCH_<rev>.json`` (the comparable artifact
+    ``bench_diff.py`` consumes) and return the path."""
+    rev = _git_rev()
+    doc = {
+        "schema": 1,
+        "rev": rev,
+        "toy": bool(toy),
+        "machine": _machine_info(),
+        "rows": [{"name": n, "us_per_call": float(us), "note": note}
+                 for n, us, note in rows],
+    }
+    if path is None:
+        path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            f"BENCH_{rev}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def run_serve(toy: bool = False):
@@ -291,3 +472,13 @@ def run_spec(toy: bool = False):
     rows.append(("overhead.serve_spec_rollback_decode", t_rb,
                  f"speedup={t_plain/t_rb:.1f}x|accept={a_rb:.2f}"))
     return rows
+
+
+if __name__ == "__main__":
+    import sys
+    _toy = "--toy" in sys.argv
+    _rows = run(toy=_toy)
+    for _n, _us, _note in _rows:
+        print(f"{_n},{_us:.1f},{_note}")
+    _out = [a for a in sys.argv[1:] if a != "--toy"]
+    print("wrote", emit_json(_rows, _toy, path=_out[0] if _out else None))

@@ -33,6 +33,22 @@ The value comparison runs on-device via the silent_compare Pallas kernel
 (2 reads/element — roofline-minimal) using the substrate's single
 approximate-equality definition, so the per-step overhead is bounded by
 the sampled leaf/site set, mirroring the paper's 7%-overhead philosophy.
+
+Kernel tier (``on_kernel_store`` / ``on_kernel_verify``, DESIGN.md
+§ Kernel tier): the serving Pallas kernels measure waste at the machine
+store site itself — every paged K/V store epilogue emits per-slot
+[stored, silent, dropped] element counts (kernels/paged_attention.py) —
+and the engine feeds them here per (layer, store site). Where tier 3
+samples sites with watchpoints (Eq. (1) estimator), the kernel tier is
+EXHAUSTIVE: every element of every store is counted in-kernel, so the
+checked/flagged counters hold exact populations and the fraction
+estimator degenerates to the true fraction. Measurement and
+classification split: the kernel counts stores without knowing why;
+the engine, which knows the accept point, classifies the verify tick's
+stored-but-rejected rows (``kernel_rejected_draft_store`` — the
+machine-level replication of tier 3's ``rejected_draft_store``:
+1 − accept-rate under overwrite, exactly 0 under rollback, where the
+kernel provably stored only the accepted prefix).
 """
 from __future__ import annotations
 
@@ -250,13 +266,123 @@ class ServingDetectors:
         self.num_layers = 1
         self.site_bytes = 0
         self.paged = False
+        # kernel tier (tier 4): exhaustive in-kernel store-site counters,
+        # kept as its own profile so the §5.6 merge composes it with the
+        # sampled tier-3 report without mixing estimator populations
+        self.kernel = WasteProfile(tier=4)
+        self.kv_itemsize = 4
+        self.row_elems: dict = {}
 
     def bind(self, *, num_layers: int, site_bytes: int,
-             paged: bool = False) -> None:
-        """Engine geometry: layer count, bytes per K/V site, KV layout."""
+             paged: bool = False, kv_itemsize: int = 4,
+             row_elems: Optional[dict] = None) -> None:
+        """Engine geometry: layer count, bytes per K/V site, KV layout.
+
+        kv_itemsize / row_elems feed the kernel tier: bytes per stored
+        element, and per KV sub-block the K+V element count of ONE
+        stored row (2 * Hkv * D) — the unit that converts the kernel's
+        element counts back into row counts for classification."""
         self.num_layers = max(1, num_layers)
         self.site_bytes = site_bytes
         self.paged = paged
+        self.kv_itemsize = kv_itemsize
+        self.row_elems = dict(row_elems or {})
+
+    # -- kernel tier (in-kernel store-site counters) -------------------
+    def on_kernel_store(self, step: int, site: str, counts) -> None:
+        """Merge one forward's in-kernel waste counters.
+
+        counts: per KV sub-block name, an (L, B, 3) int array of
+        [stored, silent, dropped] ELEMENT counts measured at the paged
+        store epilogue (L = scanned layers, B = slots). Exhaustive, not
+        sampled: checked/flagged hold the full store population.
+        ``site`` names the store site (prefill / decode / verify /
+        commit) — findings coalesce per (site, sub-block, layer)."""
+        isz = self.kv_itemsize
+        for name, c in counts.items():
+            c = np.asarray(c)
+            per_layer = c.sum(axis=1)                      # (L, 3)
+            stored = int(per_layer[:, 0].sum())
+            silent = int(per_layer[:, 1].sum())
+            dropped = int(per_layer[:, 2].sum())
+            k = self.kernel
+            k.bump_total("kernel_store_elems", stored)
+            k.bump_total("kernel_silent_elems", silent)
+            k.bump_total("kernel_dropped_elems", dropped)
+            k.checked["kernel_silent_store"] = \
+                k.checked.get("kernel_silent_store", 0) + stored
+            k.flagged["kernel_silent_store"] = \
+                k.flagged.get("kernel_silent_store", 0) + silent
+            k.checked["kernel_dead_store"] = \
+                k.checked.get("kernel_dead_store", 0) + stored + dropped
+            k.flagged["kernel_dead_store"] = \
+                k.flagged.get("kernel_dead_store", 0) + dropped
+            for layer in range(per_layer.shape[0]):
+                st, si, dr = (int(x) for x in per_layer[layer])
+                if si:
+                    k.add_pair("kernel_silent_store", 4,
+                               (f"kernel:{site}", name, f"layer:{layer}"),
+                               (f"serve.engine:{site}",), si * isz,
+                               stored_bytes=st * isz)
+                if dr:
+                    k.add_pair("kernel_dead_store", 4,
+                               (f"kernel:{site}", name, f"layer:{layer}"),
+                               (f"serve.engine:{site}",), dr * isz,
+                               stored_bytes=st * isz)
+
+    def on_kernel_verify(self, step: int, counts, accepted, draft_len,
+                         active) -> None:
+        """Classify one verify tick's kernel counters against the accept
+        point (measurement in-kernel, classification host-side).
+
+        counts: as in ``on_kernel_store`` — under overwrite these are
+        the verify forward's full-window stores, under rollback the
+        commit's accepted-prefix stores (the deferred window stored
+        nothing). accepted/draft_len/active: (B,) accept counts m, real
+        draft counts, live mask. Per slot the kernel-measured stored
+        rows are stored_elems / row_elems; rows beyond 1 + m (capped to
+        the proposed drafts) are rejected — so the fraction is exactly
+        1 − accept-rate when the window was overwritten and exactly 0
+        when only the accepted prefix was committed."""
+        self.on_kernel_store(step, "verify", counts)
+        accepted = np.asarray(accepted)
+        draft_len = np.asarray(draft_len)
+        active = np.asarray(active)
+        k = self.kernel
+        for name, c in counts.items():
+            re = self.row_elems.get(name)
+            if not re:
+                continue
+            c = np.asarray(c)
+            # layers store identically; measure rows from layer 0
+            rows_stored = c[0, :, 0] // re                 # (B,)
+            for b in range(c.shape[1]):
+                if not active[b] or draft_len[b] == 0:
+                    continue
+                drafts_stored = min(int(draft_len[b]),
+                                    max(0, int(rows_stored[b]) - 1))
+                rejected = max(0, drafts_stored - int(accepted[b]))
+                k.checked["kernel_rejected_draft_store"] = \
+                    k.checked.get("kernel_rejected_draft_store", 0) \
+                    + int(draft_len[b])
+                k.flagged["kernel_rejected_draft_store"] = \
+                    k.flagged.get("kernel_rejected_draft_store", 0) \
+                    + rejected
+                if rejected:
+                    k.add_pair(
+                        "kernel_rejected_draft_store", 4,
+                        ("kernel:verify", name),
+                        ("serve.engine:verify",),
+                        rejected * re * self.kv_itemsize
+                        * c.shape[0],
+                        accepted=int(accepted[b]))
+
+    def combined(self) -> WasteProfile:
+        """Tier-3 sampled report + tier-4 kernel counters, §5.6-merged."""
+        out = WasteProfile()
+        out.merge(self.report)
+        out.merge(self.kernel)
+        return out
 
     # -- silent prefix loads -------------------------------------------
     @staticmethod

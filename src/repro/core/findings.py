@@ -30,6 +30,13 @@ SCHEMA_VERSION = 1
 # kinds whose fraction estimator is meaningful per-access (Defs. 1-3)
 TIER1_KINDS = ("dead_store", "silent_store", "silent_load")
 
+# the machine-code attribution tier (DESIGN.md § Kernel tier): findings
+# whose counters were measured INSIDE the serving Pallas kernels at the
+# store site (kernel_silent_store, kernel_dead_store,
+# kernel_rejected_draft_store). Exhaustive populations, so for tier-4
+# kinds the Eq. (1) estimator returns the exact fraction, not a sample.
+TIER_KERNEL = 4
+
 
 def _fmax(a: float, b: float) -> float:
     """NaN-robust max: prefer the non-NaN operand (both NaN -> NaN).

@@ -27,6 +27,24 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def online_softmax_step(s, v, m_scr, l_scr, acc_scr):
+    """One flash accumulation step, shared by every attention kernel in
+    this package (causal flash, paged decode, paged window).
+
+    ``s``: (rows, cols) masked f32 scores; ``v``: (cols, D) f32 values;
+    the three scratch refs are the (rows, 1) running max / denominator
+    and the (rows, D) output accumulator, persisted across the innermost
+    grid sweep."""
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                   scale: float, causal: bool, block_q: int, block_k: int,
                   seq_len: int):
@@ -63,16 +81,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         if causal:
             mask = mask & (qpos >= kpos)
         s = jnp.where(mask, s, NEG_INF)
-
-        m_prev = m_scr[...]                          # (block_q, 1)
-        m_cur = jnp.max(s, axis=-1, keepdims=True)
-        m_new = jnp.maximum(m_prev, m_cur)
-        p = jnp.exp(s - m_new)
-        corr = jnp.exp(m_prev - m_new)
-        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
-        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-        m_scr[...] = m_new
+        online_softmax_step(s, v, m_scr, l_scr, acc_scr)
 
     @pl.when(ki == nk - 1)
     def _fin():

@@ -59,6 +59,68 @@ def attention(q, k, v, *, causal: bool = True, q_offset=0,
 # through one kernel namespace
 paged_update = _ref.paged_update
 paged_gather = _ref.paged_gather
+paged_store_counts = _ref.paged_store_counts
+
+# store-site waste-counter tolerance (kernel tier): exact equality, the
+# paper's Def.-2 silent-store semantics for same-dtype overwrites
+COUNTER_TOL = 0.0
+
+
+def paged_decode(q, k_new, v_new, pool_k, pool_v, pt, idx, *,
+                 counters: bool = False):
+    """One-token paged-attention decode: attend slot history + the new
+    K/V row, scatter the row through the page table.
+
+    Returns ``(out, ck, cv, cnt)`` — cnt is the (B, 3) int32 store-site
+    waste counter block ([stored, silent, dropped] elements, see
+    ``kernels/paged_attention.py``) or None when ``counters=False``.
+
+    Pallas path: the kernel gathers K/V pages in-kernel via the
+    scalar-prefetched page table (no logical-view materialization) and
+    measures the counters at the store site; only the O(B*Hkv*D)
+    single-row scatter runs outside. Ref path: the scatter-gather-mask
+    composition from ``ref.py``.
+    """
+    if _use_pallas():
+        from repro.kernels.paged_attention import paged_decode_attention
+        out, _, cnt = paged_decode_attention(
+            q, k_new, v_new, pool_k, pool_v, pt, idx,
+            tol=COUNTER_TOL, interpret=_pallas_interpret())
+        ck, cv = _ref.paged_update(pool_k, pool_v, k_new, v_new, pt, idx)
+        return out, ck, cv, (cnt if counters else None)
+    cnt = None
+    if counters:
+        cnt = _ref.paged_store_counts(pool_k, pool_v, k_new, v_new, pt, idx,
+                                      tol=COUNTER_TOL)
+    dt = q.dtype
+    ck, cv = _ref.paged_update(pool_k, pool_v, k_new, v_new, pt, idx)
+    gk, valid = _ref.paged_gather(ck, pt)
+    gv, _ = _ref.paged_gather(cv, pt)
+    out = _ref.attention_ref(q, gk.astype(dt), gv.astype(dt), causal=True,
+                             q_offset=idx, kv_len=idx + 1, kv_valid=valid)
+    return out, ck, cv, cnt
+
+
+def paged_window(q, k_win, v_win, pool_k, pool_v, pt, idx, *,
+                 store: bool = True, counters: bool = False):
+    """S-token paged window forward (prefill chunk / width-k verify):
+    attend committed history + the in-window causal part, and — store
+    mode — write the window rows into the pool through the page table.
+
+    Returns ``(out, ck, cv, cnt)`` like ``paged_decode``; with
+    ``store=False`` ("defer"/rollback verify) the pool is untouched and
+    cnt is all-zero (no machine-level stores happen).
+    """
+    if _use_pallas():
+        from repro.kernels.flash_prefill import paged_window_attention
+        out, _, cnt, ck, cv = paged_window_attention(
+            q, k_win, v_win, pool_k, pool_v, pt, idx, store=store,
+            tol=COUNTER_TOL, interpret=_pallas_interpret())
+        return out, ck, cv, (cnt if counters else None)
+    out, ck, cv, cnt = _ref.paged_window_ref(
+        q, k_win, v_win, pool_k, pool_v, pt, idx, store=store,
+        tol=COUNTER_TOL)
+    return out, ck, cv, (cnt if counters else None)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, interpret=None,

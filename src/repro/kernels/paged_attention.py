@@ -1,0 +1,196 @@
+"""Paged-attention decode kernel (Pallas TPU).
+
+One new token per slot attends over its whole paged KV history. The
+kernel gathers K/V pages from the pool *inside* the kernel: the page
+table and per-slot positions are scalar-prefetched, and each kv grid
+step's BlockSpec index map chases ``pt[b, m]`` directly, so the
+(B, M*page) logical view the ref path materializes in HBM
+(``ref.paged_gather``) never exists. The new token's K/V row is spliced
+into its page block in VMEM (the pool scatter itself stays a cheap
+O(B*Hkv*D) host-side ``ref.paged_update`` — one row per slot).
+
+Waste counters (the machine-code tier of the detector stack, see
+DESIGN.md § Kernel tier): at the splice step — the store site of the
+new K/V row — the kernel compares the incoming row against the pool
+content it overwrites with ``core.events.silent_mask`` semantics and
+emits per-slot element counts [stored, silent, dropped]:
+
+  * stored  — elements whose page-table-mapped store will land;
+  * silent  — stored elements equal (within tol) to the old value
+              (paper Def. 2 silent stores, counted at the store site);
+  * dropped — elements whose target page is unmapped (the store is
+              masked off: dead lanes).
+
+Grid iteration order is (B, Hq, M) with the page dim innermost; flash
+accumulators live in VMEM scratch across the page sweep. All grid dims
+are "arbitrary" (scratch carries state), so revisiting semantics match
+interpret mode.
+
+Validated in interpret mode on CPU against the ref composition
+``paged_update -> paged_gather -> attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.events import silent_mask
+from repro.kernels.flash_attention import online_softmax_step
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pt_ref, idx_ref, q_ref, kn_ref, vn_ref, k_ref, v_ref,
+                   o_ref, lse_ref, cnt_ref,
+                   m_scr, l_scr, acc_scr, cnt_scr, *,
+                   scale: float, ps: int, G: int, tol: float):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    m = pl.program_id(2)
+    nm = pl.num_programs(2)
+    idx = idx_ref[b]
+    page = pt_ref[b, m]
+
+    @pl.when((h == 0) & (m == 0))
+    def _zero_cnt():
+        cnt_scr[...] = jnp.zeros_like(cnt_scr)
+
+    @pl.when(m == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    offs = jax.lax.broadcasted_iota(jnp.int32, (ps, 1), 0)
+    pos = m * ps + offs                                   # (ps, 1) logical
+
+    live = (idx >= 0) & (page >= 0) & (m * ps <= idx)
+
+    @pl.when(live)
+    def _attend():
+        q = q_ref[0].astype(jnp.float32)                  # (1, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)            # (ps, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        is_new = pos == idx                               # (ps, 1)
+        k = jnp.where(is_new, kn_ref[0].astype(jnp.float32), k)
+        v = jnp.where(is_new, vn_ref[0].astype(jnp.float32), v)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                     # (1, ps)
+        s = jnp.where(pos.T <= idx, s, NEG_INF)
+        online_softmax_step(s, v, m_scr, l_scr, acc_scr)
+
+    # --- store-site counters: the new row lands in page idx // ps ------
+    D = q_ref.shape[-1]
+
+    @pl.when((h % G == 0) & (idx >= 0) & (m == idx // ps))
+    def _count():
+        pdt = k_ref.dtype
+        old_k = k_ref[0, :, 0].astype(jnp.float32)        # pre-store content
+        old_v = v_ref[0, :, 0].astype(jnp.float32)
+        new_k = kn_ref[0].astype(pdt).astype(jnp.float32)
+        new_v = vn_ref[0].astype(pdt).astype(jnp.float32)
+        row = pos == idx                                  # (ps, 1)
+        sil = (jnp.sum(jnp.where(row, silent_mask(old_k, new_k, tol), False),
+                       dtype=jnp.int32)
+               + jnp.sum(jnp.where(row, silent_mask(old_v, new_v, tol), False),
+                         dtype=jnp.int32))
+        ok = page >= 0
+        cnt_scr[0, 0] += jnp.where(ok, 2 * D, 0)
+        cnt_scr[0, 1] += jnp.where(ok, sil, 0)
+        cnt_scr[0, 2] += jnp.where(ok, 0, 2 * D)
+
+    cnt_ref[...] = cnt_scr[...]
+
+    @pl.when(m == nm - 1)
+    def _fin():
+        l = l_scr[...]
+        lse_ref[...] = jnp.where(l > 0.0, m_scr[...] + jnp.log(
+            jnp.where(l > 0.0, l, 1.0)), NEG_INF)
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                           pool_k: jax.Array, pool_v: jax.Array,
+                           pt: jax.Array, idx: jax.Array, *,
+                           tol: float = 0.0,
+                           interpret: bool = False):
+    """q/k_new/v_new: (B, 1, H*, D); pool: (P, page, Hkv, D); pt: (B, M);
+    idx: (B,) per-slot positions (negative = idle slot, attends nothing).
+
+    Returns ``(out, lse, counters)``: out (B, 1, Hq, D); lse (B, Hq)
+    per-(slot, head) log-sum-exp for sharded flash combines (NEG_INF
+    where nothing was attended); counters (B, 3) int32 — see module doc.
+
+    NOTE: the kernel does not write the pool. Callers scatter the single
+    new row with ``ref.paged_update`` (the counters still describe that
+    store: they are measured here against pre-store pool content).
+    """
+    B, S, Hq, D = q.shape
+    assert S == 1, "decode kernel is single-token"
+    P, ps, Hkv, _ = pool_k.shape
+    M = pt.shape[1]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    pt = pt.astype(jnp.int32)
+    idx = idx.astype(jnp.int32)
+    q2 = q.reshape(B, Hq, D)
+    # round-trip the new row through the pool dtype: the ref path attends
+    # the value the pool actually stores, so the splice must match it bit
+    # for bit (e.g. bf16 pools under f32 activations)
+    pdt = pool_k.dtype
+    kn = k_new.reshape(B, Hkv, D).astype(pdt)
+    vn = v_new.reshape(B, Hkv, D).astype(pdt)
+
+    def q_index(b, h, m, pt_ref, idx_ref):
+        return (b, h, 0)
+
+    def new_index(b, h, m, pt_ref, idx_ref):
+        return (b, h // G, 0)
+
+    def pool_index(b, h, m, pt_ref, idx_ref):
+        return (jnp.clip(pt_ref[b, m], 0, P - 1), 0, h // G, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hq, M),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), q_index),
+            pl.BlockSpec((1, 1, D), new_index),
+            pl.BlockSpec((1, 1, D), new_index),
+            pl.BlockSpec((1, ps, 1, D), pool_index),
+            pl.BlockSpec((1, ps, 1, D), pool_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, D), q_index),
+            pl.BlockSpec((1, 1), lambda b, h, m, *_: (b, h)),
+            pl.BlockSpec((1, 3), lambda b, h, m, *_: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),      # running max
+            pltpu.VMEM((1, 1), jnp.float32),      # running denom
+            pltpu.VMEM((1, D), jnp.float32),      # accumulator
+            pltpu.VMEM((1, 3), jnp.int32),        # waste counters
+        ],
+    )
+    out, lse, cnt = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, ps=ps, G=G, tol=tol),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+            jax.ShapeDtypeStruct((B, Hq), jnp.float32),
+            jax.ShapeDtypeStruct((B, 3), jnp.int32),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(pt, idx, q2, kn, vn, pool_k, pool_v)
+    return out.reshape(B, 1, Hq, D), lse, cnt

@@ -100,6 +100,109 @@ def paged_update(pool_k: jax.Array, pool_v: jax.Array, k_new: jax.Array,
     return scat(pool_k, k_new), scat(pool_v, v_new)
 
 
+def paged_store_counts(pool_k: jax.Array, pool_v: jax.Array,
+                       k_new: jax.Array, v_new: jax.Array,
+                       pt: jax.Array, idx: jax.Array,
+                       length: Optional[jax.Array] = None,
+                       tol: float = 0.0) -> jax.Array:
+    """Waste counters for a ``paged_update`` store, per slot: (B, 3) int32
+    ``[stored, silent, dropped]`` element counts over K and V.
+
+    This is the pure-jnp oracle for the in-kernel store-site counters
+    (kernel tier, see DESIGN.md): *stored* elements land through the
+    page table; *silent* stored elements equal the pool content they
+    overwrite within ``core.events.silent_mask`` tolerance (paper Def. 2,
+    after the round-trip through the pool dtype); *dropped* elements
+    target an unmapped page and are masked off (dead store lanes). Idle
+    slots (negative positions) attempt no store and count nothing.
+    """
+    from repro.core.events import silent_mask
+    P, ps = pool_k.shape[0], pool_k.shape[1]
+    B, S, Hkv, D = k_new.shape
+    M = pt.shape[1]
+    pos = idx[:, None] + jnp.arange(S)[None, :]            # (B, S)
+    attempted = pos >= 0
+    if length is not None:
+        attempted = attempted & (jnp.arange(S)[None, :] < length[:, None])
+    page_i = jnp.floor_divide(pos, ps)
+    page = jnp.where(
+        (page_i >= 0) & (page_i < M),
+        jnp.take_along_axis(pt, jnp.clip(page_i, 0, M - 1), axis=1), -1)
+    landing = attempted & (page >= 0)
+
+    flat = jnp.where(landing, page * ps + jnp.remainder(pos, ps), 0)
+
+    def row_silent(pool, new):
+        old = pool.reshape((P * ps,) + pool.shape[2:])[flat]   # (B,S,Hkv,D)
+        oldf = old.astype(jnp.float32)
+        newf = new.astype(pool.dtype).astype(jnp.float32)
+        return jnp.sum(silent_mask(oldf, newf, tol), axis=(2, 3),
+                       dtype=jnp.int32)                        # (B, S)
+
+    sil = jnp.where(landing,
+                    row_silent(pool_k, k_new) + row_silent(pool_v, v_new), 0)
+    stored = jnp.sum(jnp.where(landing, 2 * Hkv * D, 0), axis=1,
+                     dtype=jnp.int32)
+    silent = jnp.sum(sil, axis=1, dtype=jnp.int32)
+    dropped = jnp.sum(jnp.where(attempted & (page < 0), 2 * Hkv * D, 0),
+                      axis=1, dtype=jnp.int32)
+    return jnp.stack([stored, silent, dropped], axis=1)
+
+
+def paged_decode_ref(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                     pool_k: jax.Array, pool_v: jax.Array,
+                     pt: jax.Array, idx: jax.Array,
+                     tol: float = 0.0) -> tuple:
+    """Oracle for the paged-attention decode kernel: the store-then-
+    gather-then-mask composition the serving fallback path runs, plus
+    the store-site waste counters. Returns (out, ck, cv, counters)."""
+    dt = q.dtype
+    cnt = paged_store_counts(pool_k, pool_v, k_new, v_new, pt, idx, tol=tol)
+    ck, cv = paged_update(pool_k, pool_v, k_new, v_new, pt, idx)
+    gk, valid = paged_gather(ck, pt)
+    gv, _ = paged_gather(cv, pt)
+    out = attention_ref(q, gk.astype(dt), gv.astype(dt), causal=True,
+                        q_offset=idx, kv_len=idx + 1, kv_valid=valid)
+    return out, ck, cv, cnt
+
+
+def paged_window_ref(q: jax.Array, k_win: jax.Array, v_win: jax.Array,
+                     pool_k: jax.Array, pool_v: jax.Array,
+                     pt: jax.Array, idx: jax.Array, *,
+                     store: bool = True, tol: float = 0.0) -> tuple:
+    """Oracle for the fused paged window kernel (prefill / verify).
+
+    ``store=True`` is the scatter-then-gather composition the overwrite
+    paths run (all S window rows stored through the page table, then
+    attention over the gathered view); ``store=False`` is the "defer"
+    composition (window spliced into the gathered view, pool untouched,
+    zero store counters). Returns (out, ck, cv, counters).
+    """
+    dt = q.dtype
+    B, S = q.shape[:2]
+    if store:
+        cnt = paged_store_counts(pool_k, pool_v, k_win, v_win, pt, idx,
+                                 tol=tol)
+        ck, cv = paged_update(pool_k, pool_v, k_win, v_win, pt, idx)
+        gk, valid = paged_gather(ck, pt)
+        gv, _ = paged_gather(cv, pt)
+    else:
+        cnt = jnp.zeros((B, 3), jnp.int32)
+        ck, cv = pool_k, pool_v
+        gk, valid = paged_gather(pool_k, pt)
+        gv, _ = paged_gather(pool_v, pt)
+        ext = gk.shape[1]
+        pos = idx[:, None] + jnp.arange(S)[None, :]
+        tgt = jnp.where((pos >= 0) & (pos < ext), pos, ext)
+        bidx = jnp.arange(B)[:, None]
+        gk = gk.at[bidx, tgt].set(k_win.astype(gk.dtype), mode="drop")
+        gv = gv.at[bidx, tgt].set(v_win.astype(gv.dtype), mode="drop")
+        valid = valid.at[bidx, tgt].set(True, mode="drop")
+    out = attention_ref(q, gk.astype(dt), gv.astype(dt), causal=True,
+                        q_offset=idx, kv_len=idx + S, kv_valid=valid)
+    return out, ck, cv, cnt
+
+
 def paged_gather(pool: jax.Array, pt: jax.Array) -> tuple:
     """Logical per-slot view of a paged pool: (B, M*page, ...) plus the
     (B, M*page) validity mask (False where the page table is unmapped —

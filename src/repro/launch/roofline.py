@@ -147,7 +147,9 @@ def ideal_kernel_bytes(cfg, shape) -> float:
     mLSTM chunked: ~4 passes over the (B,S,d_inner) working set. Training
     multiplies by ~4.5 (fwd + remat recompute + flash backward reads/writes);
     prefill by 1. Decode cells never lower the flash path (ref attention is
-    linear in cache length), so no adjustment applies.
+    linear in cache length), so no adjustment applies; the paged-KV decode
+    kernels have their own page-granular model
+    (``ideal_paged_attention_bytes``).
     """
     B, S = shape.global_batch, shape.seq_len
     D, Hq, Hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
@@ -180,6 +182,52 @@ def ideal_kernel_bytes(cfg, shape) -> float:
     elif fam == "ssm":
         d_in = int(cfg.d_model * cfg.xlstm.proj_factor_mlstm)
         total += cfg.num_layers * passes * 4 * B * S * d_in * bt
+    return total
+
+
+def ideal_paged_attention_bytes(*, batch: int, q_len: int,
+                                mapped_pages: int, max_pages: int,
+                                page_size: int, num_heads: int,
+                                num_kv_heads: int, head_dim: int,
+                                kv_bytes: float = 2.0,
+                                act_bytes: float = 2.0,
+                                materialize: bool = False) -> float:
+    """Ideal HBM bytes of ONE paged-attention forward (one layer).
+
+    The paged layout's minimal traffic is page-granular: the kernel
+    reads the page table (4 bytes/entry over every slot's table), then
+    each MAPPED page of K and V exactly once at full page granularity
+    (a partially-filled last page still moves page_size rows — that is
+    the paged gather's real cost model, and what the in-kernel gather
+    of kernels/paged_attention.py does), plus the q read, the new K/V
+    row writes and the output write.
+
+    ``materialize=True`` models the reference composition
+    (``paged_update -> paged_gather -> attention_ref``) instead: on top
+    of the kernel traffic it WRITES the (batch, max_pages*page_size)
+    logical K/V view to HBM and reads it back — the gather
+    materialization the Pallas kernel eliminates. The ratio of the two
+    is the modeled paged-decode speedup reported by
+    ``benchmarks/kernels.py`` (CPU wall time cannot show the HBM
+    effect; the byte model can, honestly labeled).
+
+    mapped_pages: total mapped page-table entries across the batch
+    (page-granular occupancy, NOT token count); max_pages: per-slot
+    table length M.
+    """
+    Hq, Hkv, D = num_heads, num_kv_heads, head_dim
+    pt_read = batch * max_pages * 4.0
+    kv_read = mapped_pages * page_size * Hkv * D * 2.0 * kv_bytes
+    q_read = batch * q_len * Hq * D * act_bytes
+    new_write = batch * q_len * Hkv * D * 2.0 * kv_bytes
+    out_write = batch * q_len * Hq * D * act_bytes
+    total = pt_read + kv_read + q_read + new_write + out_write
+    if materialize:
+        # the logical view is dense over the FULL table extent (unmapped
+        # entries gather clipped garbage that the validity mask hides):
+        # one write of the view, one read back by the attention
+        view = batch * max_pages * page_size * Hkv * D * 2.0 * kv_bytes
+        total += 2.0 * view
     return total
 
 

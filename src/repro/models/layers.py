@@ -138,29 +138,27 @@ def apply_attention(p, cfg: ModelConfig, x: jax.Array, *,
     if (cache is not None and kv_src is None and "pt" in cache
             and spec == "defer"):
         # speculative verify, rollback mode: the pool is NOT written.
-        # Attention runs over the gathered logical view with the verify
+        # Attention runs over the committed history with the verify
         # window spliced in at its positions — pure activation memory —
         # and the window K/V ride in win_k/win_v for LM.commit_verify to
         # scatter only the accepted prefix. Values round-trip through
         # the pool dtype exactly like the scatter-then-gather path, so
-        # the logits are bit-identical to overwrite mode.
+        # the logits are bit-identical to overwrite mode. Dispatches to
+        # the fused paged window kernel (store disabled) on Pallas
+        # backends, the spliced-gather ref composition elsewhere.
         from repro.kernels import ops
         idx = cache["idx"]
         pt = cache["pt"]
-        kg, valid = ops.paged_gather(cache["k"], pt)
-        vg, _ = ops.paged_gather(cache["v"], pt)
-        ext = kg.shape[1]
-        pos = idx[:, None] + jnp.arange(S)[None, :]
-        tgt = jnp.where((pos >= 0) & (pos < ext), pos, ext)
-        bidx = jnp.arange(B)[:, None]
-        kg = kg.at[bidx, tgt].set(k.astype(kg.dtype), mode="drop")
-        vg = vg.at[bidx, tgt].set(v.astype(vg.dtype), mode="drop")
-        kv_valid = valid.at[bidx, tgt].set(True, mode="drop")
+        counters = "kcnt" in cache
+        out, _, _, cnt = ops.paged_window(
+            q, k, v, cache["k"], cache["v"], pt, idx,
+            store=False, counters=counters)
         new_cache = {**cache, "idx": idx + S, "win_k": k, "win_v": v}
-        k, v = kg.astype(dt), vg.astype(dt)
-        kv_len = idx + S
-        q_offset = idx
-        causal = True
+        if counters:
+            new_cache["kcnt"] = cnt     # all-zero: no stores in defer mode
+        out = out.reshape(B, S, H * D)
+        out = out @ p["wo"]["w"].astype(dt)
+        return shard(out, "btd"), new_cache
     elif cache is not None and kv_src is None and "pt" in cache:
         # block-paged cache (serve/kv_cache.py): pool (P,page,Hkv,D),
         # page table (B,M), per-slot positions (B,). Stores scatter
@@ -170,6 +168,20 @@ def apply_attention(p, cfg: ModelConfig, x: jax.Array, *,
         from repro.kernels import ops
         idx = cache["idx"]
         pt = cache["pt"]
+        counters = "kcnt" in cache
+
+        def _finish(out, ck, cv, cnt):
+            new_cache = {**cache, "k": ck, "v": cv, "idx": idx + S}
+            if counters:
+                if cnt is None:       # sharded paths count host-side
+                    cnt = ops.paged_store_counts(
+                        cache["k"], cache["v"], k, v, pt, idx,
+                        tol=ops.COUNTER_TOL)
+                new_cache["kcnt"] = cnt
+            out = out.reshape(B, S, H * D)
+            out = out @ p["wo"]["w"].astype(dt)
+            return shard(out, "btd"), new_cache
+
         if S == 1:
             from repro.serve.flash_decode import (
                 decode_paged_attention_sharded, paged_shard_plan)
@@ -182,11 +194,11 @@ def apply_attention(p, cfg: ModelConfig, x: jax.Array, *,
                 out, ck, cv = decode_paged_attention_sharded(
                     q, k, v, cache["k"], cache["v"], pt, idx,
                     mesh=sharder.mesh, batch_axes=b_ax, seq_axes=s_ax)
-                new_cache = {**cache, "k": ck, "v": cv, "idx": idx + S}
-                out = out.reshape(B, S, H * D)
-                out = out @ p["wo"]["w"].astype(dt)
-                return shard(out, "btd"), new_cache
-        elif spec == "overwrite":
+                return _finish(out, ck, cv, None)
+            out, ck, cv, cnt = ops.paged_decode(
+                q, k, v, cache["k"], cache["v"], pt, idx, counters=counters)
+            return _finish(out, ck, cv, cnt)
+        if spec == "overwrite":
             # width-k speculative verify against a page-chunk-sharded
             # pool: each shard scatters the window rows it owns and the
             # per-query partials combine flash-style
@@ -201,18 +213,14 @@ def apply_attention(p, cfg: ModelConfig, x: jax.Array, *,
                 out, ck, cv = verify_paged_attention_sharded(
                     q, k, v, cache["k"], cache["v"], pt, idx,
                     mesh=sharder.mesh, batch_axes=b_ax, seq_axes=s_ax)
-                new_cache = {**cache, "k": ck, "v": cv, "idx": idx + S}
-                out = out.reshape(B, S, H * D)
-                out = out @ p["wo"]["w"].astype(dt)
-                return shard(out, "btd"), new_cache
-        ck, cv = ops.paged_update(cache["k"], cache["v"], k, v, pt, idx)
-        new_cache = {**cache, "k": ck, "v": cv, "idx": idx + S}
-        k, kv_valid = ops.paged_gather(ck, pt)
-        v, _ = ops.paged_gather(cv, pt)
-        k, v = k.astype(dt), v.astype(dt)
-        kv_len = idx + S
-        q_offset = idx
-        causal = True
+                return _finish(out, ck, cv, None)
+        # prefill chunk / verify-overwrite window: fused window forward
+        # (Pallas kernel with in-kernel page gather + paged-write
+        # epilogue, or the scatter-then-gather ref composition)
+        out, ck, cv, cnt = ops.paged_window(
+            q, k, v, cache["k"], cache["v"], pt, idx,
+            store=True, counters=counters)
+        return _finish(out, ck, cv, cnt)
     elif cache is not None and kv_src is None:
         idx = cache["idx"]
         if S == 1 and jnp.ndim(idx) == 0:

@@ -389,13 +389,21 @@ class LM:
     def init_paged_cache(self, params, num_slots: int, max_len: int, *,
                          page_size: int = 16,
                          num_pages: Optional[int] = None,
-                         kv_dtype=jnp.bfloat16) -> Any:
+                         kv_dtype=jnp.bfloat16,
+                         kernel_counters: bool = False) -> Any:
         """Block-paged decode cache (serve/kv_cache.py): per layer, one
         flat pool of `num_pages` pages of `page_size` K/V rows shared by
         all slots, plus a per-slot page table mapping logical positions
         to pages (-1 = unmapped) and per-slot write indices. Families
         whose every sub-block carries an indexed KV cache only (the
-        serving-engine families)."""
+        serving-engine families).
+
+        ``kernel_counters=True`` adds a per-layer ``kcnt`` leaf
+        ((num_slots, 3) int32 [stored, silent, dropped] element counts)
+        that every paged attention forward overwrites with its
+        store-site waste counters (DESIGN.md § Kernel tier); its
+        presence is the trace-time enable switch, and the leaf rides
+        the decode scan so layers stack automatically."""
         cfg, sch = self.cfg, self.sched
         Hkv, D = cfg.num_kv_heads, cfg.head_dim
         max_pages = -(-max_len // page_size)
@@ -407,13 +415,29 @@ class LM:
                 raise ValueError(
                     f"paged cache needs indexed KV in every sub-block; "
                     f"{typ!r} blocks are unsupported")
-            main[f"b{i}_{typ}"] = {
+            sub = {
                 "k": jnp.zeros((num_pages, page_size, Hkv, D), kv_dtype),
                 "v": jnp.zeros((num_pages, page_size, Hkv, D), kv_dtype),
                 "idx": jnp.zeros((num_slots,), jnp.int32),
                 "pt": jnp.full((num_slots, max_pages), -1, jnp.int32),
             }
+            if kernel_counters:
+                sub["kcnt"] = jnp.zeros((num_slots, 3), jnp.int32)
+            main[f"b{i}_{typ}"] = sub
         return {"main": _stack_cache(main, sch.n_super)}
+
+    @staticmethod
+    def kernel_counters(cache) -> Optional[Dict[str, jax.Array]]:
+        """The kernel-tier waste counters of the last paged forward, per
+        sub-block name: (n_layers, num_slots, 3) int32 stacked over the
+        scanned layers — or None when the cache was built without
+        ``kernel_counters=True``."""
+        main = cache["main"]
+        if isinstance(main, list):
+            return None
+        out = {name: sub["kcnt"] for name, sub in main.items()
+               if "kcnt" in sub}
+        return out or None
 
     @staticmethod
     def cache_is_paged(cache) -> bool:
@@ -548,6 +572,18 @@ class LM:
                                    sub["win_v"], sub["pt"])
             out = {n: v for n, v in sub.items()
                    if n not in ("win_k", "win_v")}
+            if "kcnt" in sub:
+                # kernel tier: the commit scatter is where the rollback
+                # path's machine-level stores happen — count them here so
+                # rejected_draft_store is exactly 0 (only accepted rows
+                # are ever stored).
+                def cnt(pk, pv, wk, wv, pt):
+                    return ops.paged_store_counts(
+                        pk, pv, wk, wv, pt, start, length=length,
+                        tol=ops.COUNTER_TOL)
+                out["kcnt"] = jax.vmap(cnt)(sub["k"], sub["v"],
+                                            sub["win_k"], sub["win_v"],
+                                            sub["pt"])
             out["k"], out["v"] = nk, nv
             return out
 

@@ -98,7 +98,8 @@ class ServeEngine:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefix_window: int = 32, strategy=None,
                  drafter=None, spec_k: int = 4,
-                 spec_rollback: bool = True):
+                 spec_rollback: bool = True,
+                 kernel_counters: bool = False):
         if model.cfg.family not in ENGINE_FAMILIES:
             raise ValueError(
                 f"ServeEngine needs an indexed KV cache in every block; "
@@ -125,6 +126,11 @@ class ServeEngine:
         # rollback (paged only): rejected draft rows never reach the KV
         # pool; dense always overwrites (the measured waste, kept)
         self.spec_rollback = bool(spec_rollback) and self.paged
+        # kernel tier: in-kernel store-site waste counters (paged layout
+        # only — the counters ride the paged store path)
+        if kernel_counters and not self.paged:
+            raise ValueError("kernel_counters needs kv_layout='paged'")
+        self.kernel_counters = bool(kernel_counters)
 
         if self.paged:
             max_pages = -(-max_len // page_size)
@@ -134,7 +140,8 @@ class ServeEngine:
                               prefix_window=prefix_window)
             cache = model.init_paged_cache(
                 params, num_slots, max_len, page_size=page_size,
-                num_pages=num_pages, kv_dtype=kv_dtype)
+                num_pages=num_pages, kv_dtype=kv_dtype,
+                kernel_counters=self.kernel_counters)
             self._copy_fn = jax.jit(make_page_copy())
         else:
             self.kv = None
@@ -181,8 +188,12 @@ class ServeEngine:
                 2 * int(np.prod(main[n]["k"].shape[3:]))
                 * main[n]["k"].dtype.itemsize
                 for n in self._kv_names)
-            detectors.bind(num_layers=model.sched.n_super, site_bytes=site,
-                           paged=self.paged)
+            detectors.bind(
+                num_layers=model.sched.n_super, site_bytes=site,
+                paged=self.paged,
+                kv_itemsize=main[self._kv_names[0]]["k"].dtype.itemsize,
+                row_elems={n: 2 * int(np.prod(main[n]["k"].shape[3:]))
+                           for n in self._kv_names})
             self._peek_fn = jax.jit(self._make_peek())
 
     # ---------------------------- jitted steps ------------------------
@@ -202,6 +213,22 @@ class ServeEngine:
 
     def _peek(self, layer: int, page: int, off: int) -> np.ndarray:
         return np.asarray(self._peek_fn(self.cache, layer, page, off))
+
+    def _read_kernel_counts(self):
+        """The last jitted forward's in-kernel [stored, silent, dropped]
+        element counts, per KV sub-block, as (L, B, 3) host arrays —
+        or None when the kernel tier is off / unobserved."""
+        if not self.kernel_counters or self.detectors is None:
+            return None
+        counts = self.model.kernel_counters(self.cache)
+        if counts is None:
+            return None
+        return {n: np.asarray(c) for n, c in counts.items()}
+
+    def _emit_kernel_store(self, site: str) -> None:
+        counts = self._read_kernel_counts()
+        if counts is not None:
+            self.detectors.on_kernel_store(self.step_no, site, counts)
 
     # ------------------------------ schedule ---------------------------
     def submit(self, req: Request) -> None:
@@ -340,6 +367,7 @@ class ServeEngine:
         self.stats["padded_prefill_tokens"] += B * P - int(sum(suffixes))
         self.stats["prefills"] += 1
         self.tokens = toks_out
+        self._emit_kernel_store("prefill")
         if self.paged:
             for b, req in zip(taken, admitted):
                 self._note_freed(self.kv.register_prefix(b, req.tokens))
@@ -361,6 +389,7 @@ class ServeEngine:
         self.stats["decode_tokens"] += int(active.sum())
         self.stats["ticks"] += 1
         self.tokens = nxt
+        self._emit_kernel_store("decode")
         self._lengths[active] += 1
         host = np.asarray(nxt)[:, 0]
         slots_now = list(self.slots)
@@ -456,6 +485,14 @@ class ServeEngine:
         m = np.asarray(m)
         self.stats["draft_accepted"] += int(m[active].sum())
         self.tokens = nxt
+        counts = self._read_kernel_counts()
+        if counts is not None:
+            # overwrite mode: the verify forward's full-window stores;
+            # rollback: the commit's accepted-prefix stores (the deferred
+            # window stored nothing) — classification against m happens
+            # in the detector, measurement stays in-kernel
+            self.detectors.on_kernel_verify(self.step_no, counts, m, dlen,
+                                            active)
         self._lengths[active] += 1 + m[active]
 
         slots_now = list(self.slots)

@@ -32,6 +32,24 @@ def _axis_index(names: Tuple[str, ...], mesh) -> jax.Array:
     return idx
 
 
+def _pallas_mode() -> Tuple[bool, bool]:
+    """(use Pallas kernels inside the shard bodies, interpret mode)."""
+    from repro.kernels import ops
+    return ops._use_pallas(), ops._pallas_interpret()
+
+
+def _lse_combine(o_l, lse, seq_axes, out_dtype):
+    """Flash-decoding cross-shard combine from per-shard normalized
+    outputs + log-sum-exp: out = Σ_i e^{lse_i - max} o_i / Σ_i e^{lse_i
+    - max}. Idle slots (all lse = -inf) come back zero, no NaNs.
+    o_l: (..., D) with lse broadcastable to o_l.shape[:-1]."""
+    gm = jax.lax.pmax(lse, seq_axes)
+    w = jnp.exp(lse - gm)
+    den = jax.lax.psum(w, seq_axes)
+    num = jax.lax.psum(o_l.astype(jnp.float32) * w[..., None], seq_axes)
+    return (num / jnp.maximum(den, 1e-30)[..., None]).astype(out_dtype)
+
+
 def decode_attention_sharded(q, k_new, v_new, ck, cv, idx, *, mesh,
                              batch_axes: Tuple[str, ...],
                              seq_axes: Tuple[str, ...]):
@@ -111,6 +129,7 @@ def decode_paged_attention_sharded(q, k_new, v_new, ck, cv, pt, idx, *,
     n_seq = int(np.prod([mesh.shape[a] for a in seq_axes]))
     chunk = P // n_seq                 # pages per shard
     scale = 1.0 / np.sqrt(D)
+    use_pallas, interp = _pallas_mode()
 
     b = batch_axes if batch_axes else None
     q_spec = PS(b, None, None, None)
@@ -144,6 +163,21 @@ def decode_paged_attention_sharded(q, k_new, v_new, ck, cv, pt, idx, *,
         # -- gather: the slot's logical view from locally-owned pages
         lpt = pt_l - off                              # (B', M)
         owned = (pt_l >= 0) & (lpt >= 0) & (lpt < chunk)
+
+        if use_pallas:
+            # Pallas fast path: the decode kernel chases the LOCALIZED
+            # page table (-1 on pages this shard does not own) so the
+            # logical-view gather never materializes; partials combine
+            # with the kernel's per-(slot, head) lse. Counters are
+            # polluted by non-owner shards and ignored — the engine's
+            # sharded path counts stores host-side (layers._finish).
+            from repro.kernels.paged_attention import paged_decode_attention
+            o_l, lse, _ = paged_decode_attention(
+                q_l, kn, vn, ck_n, cv_n, jnp.where(owned, lpt, -1), idx_l,
+                interpret=interp)
+            out = _lse_combine(o_l, lse[:, None, :], seq_axes, q_l.dtype)
+            return out, ck_n, cv_n
+
         kg = jnp.take(ck_n, jnp.clip(lpt, 0, chunk - 1), axis=0)
         vg = jnp.take(cv_n, jnp.clip(lpt, 0, chunk - 1), axis=0)
         Bl = pt_l.shape[0]
@@ -201,6 +235,7 @@ def verify_paged_attention_sharded(q, k_new, v_new, ck, cv, pt, idx, *,
     n_seq = int(np.prod([mesh.shape[a] for a in seq_axes]))
     chunk = P // n_seq                 # pages per shard
     scale = 1.0 / np.sqrt(D)
+    use_pallas, interp = _pallas_mode()
 
     b = batch_axes if batch_axes else None
     q_spec = PS(b, None, None, None)
@@ -212,6 +247,29 @@ def verify_paged_attention_sharded(q, k_new, v_new, ck, cv, pt, idx, *,
         f32 = jnp.float32
         off = _axis_index(seq_axes, mesh) * chunk
         Bl = pt_l.shape[0]
+
+        if use_pallas:
+            # Pallas fast path: the fused window kernel on the LOCALIZED
+            # page table does the whole shard body — its store epilogue
+            # writes exactly the window rows whose pages this shard owns
+            # (store-mode window validity = "target page mapped", which
+            # under the localized table means locally owned, so every
+            # window row is attended and stored by exactly one shard),
+            # its committed-history sweep covers the owned pages, and
+            # the per-(slot, head, query) lse drives the cross-shard
+            # combine. Counters are ignored here — the engine's sharded
+            # path counts stores host-side (layers._finish).
+            from repro.kernels.flash_prefill import paged_window_attention
+            lpt = pt_l - off
+            owned = (pt_l >= 0) & (lpt >= 0) & (lpt < chunk)
+            o_l, lse, _, ck_n, cv_n = paged_window_attention(
+                q_l, kn, vn, ck_l, cv_l, jnp.where(owned, lpt, -1), idx_l,
+                store=True, interpret=interp)
+            # lse: (B', Hq, W) -> (B', W, Hq) to match o_l
+            out = _lse_combine(o_l, lse.transpose(0, 2, 1), seq_axes,
+                               q_l.dtype)
+            return out, ck_n, cv_n
+
         # -- store: route every window row through the page table; only
         # the shard owning the target page writes, everything else drops
         pos = idx_l[:, None] + jnp.arange(W)[None, :]        # (B', W)

@@ -28,6 +28,10 @@ EXPECTED_ROWS = {
     "overhead.serve_spec_oracle_decode",
     "overhead.serve_spec_ngram_decode",
     "overhead.serve_spec_rollback_decode",
+    "overhead.kernel_paged_decode_ref",
+    "overhead.kernel_paged_decode_pallas",
+    "overhead.kernel_prefill_pallas",
+    "overhead.kernel_verify_pallas",
 }
 
 
@@ -56,3 +60,46 @@ def test_every_overhead_row_runs_at_toy_sizes():
     replay = next(note for name, _, note in rows
                   if name == "overhead.tier1_replay_e8")
     assert "identical=True" in replay
+    # the Pallas kernel rows must certify counter parity with the ref
+    # compositions, and the decode row's modeled HBM speedup (the honest
+    # paged-gather-vs-materialization number) must clear 1.3x
+    notes = {name: note for name, _, note in rows}
+    for name in ("overhead.kernel_paged_decode_pallas",
+                 "overhead.kernel_prefill_pallas",
+                 "overhead.kernel_verify_pallas"):
+        assert "counters_match=True" in notes[name], (name, notes[name])
+    dec = notes["overhead.kernel_paged_decode_pallas"]
+    speedup = float(dec.split("modeled_hbm_speedup=")[1].split("x")[0])
+    assert speedup >= 1.3, dec
+    assert "defer_zero_stores=True" in notes["overhead.kernel_verify_pallas"]
+
+
+def test_bench_json_emit_and_diff(tmp_path):
+    import json
+    import subprocess
+    import sys
+    mod = _load_overhead()
+    rows = [("overhead.fake_a", 100.0, "baseline"),
+            ("overhead.fake_b", 250.0, "x")]
+    base = mod.emit_json(rows, toy=True, path=str(tmp_path / "BENCH_a.json"))
+    doc = json.load(open(base))
+    assert doc["schema"] == 1 and len(doc["rows"]) == 2
+    assert doc["machine"]["backend"]
+    diff = os.path.join(os.path.dirname(_BENCH), "bench_diff.py")
+    # within band -> rc 0; regression beyond band -> rc 1; missing -> rc 1
+    cur_ok = mod.emit_json([("overhead.fake_a", 110.0, ""),
+                            ("overhead.fake_b", 240.0, "")],
+                           toy=True, path=str(tmp_path / "ok.json"))
+    cur_bad = mod.emit_json([("overhead.fake_a", 500.0, ""),
+                             ("overhead.fake_b", 240.0, "")],
+                            toy=True, path=str(tmp_path / "bad.json"))
+    cur_miss = mod.emit_json([("overhead.fake_a", 100.0, "")],
+                             toy=True, path=str(tmp_path / "miss.json"))
+    run = lambda cur: subprocess.run(  # noqa: E731
+        [sys.executable, diff, base, cur, "--band", "1.5"],
+        capture_output=True, text=True)
+    assert run(cur_ok).returncode == 0
+    r_bad = run(cur_bad)
+    assert r_bad.returncode == 1 and "REGRESSION" in r_bad.stdout
+    r_miss = run(cur_miss)
+    assert r_miss.returncode == 1 and "missing" in r_miss.stdout

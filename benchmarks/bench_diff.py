@@ -92,8 +92,32 @@ def diff(base: dict, cur: dict, band: float) -> int:
             tag = "improved"
         print(f"{name:<{width}}  {b:>12.1f} -> {c:>12.1f} us  "
               f"{ratio:>6.2f}x  {tag}")
+    rc = max(rc, diff_findings(base.get("findings"), cur.get("findings")))
     print(f"baseline rev={base.get('rev')} current rev={cur.get('rev')} "
           f"band={band:.2f}x -> {'FAIL' if rc else 'OK'}")
+    return rc
+
+
+def diff_findings(base: dict | None, cur: dict | None) -> int:
+    """Per-kind waste-finding count diff (exact, no noise band — counts
+    are deterministic). A kind whose count GREW, or a brand-new kind,
+    fails; drops are improvements; a baseline without the optional
+    ``findings`` key only produces a notice (old artifacts stay valid)."""
+    if cur is None:
+        return 0
+    if base is None:
+        if cur:
+            print(f"note: baseline has no findings counts; current has "
+                  f"{sum(cur.values())} across {len(cur)} kinds")
+        return 0
+    rc = 0
+    for kind in sorted(set(base) | set(cur)):
+        b, c = int(base.get(kind, 0)), int(cur.get(kind, 0))
+        if c > b:
+            print(f"FAIL: findings[{kind}] grew {b} -> {c}")
+            rc = 1
+        elif c < b:
+            print(f"findings[{kind}] improved {b} -> {c}")
     return rc
 
 

@@ -280,9 +280,13 @@ def _machine_info() -> dict:
     }
 
 
-def emit_json(rows, toy: bool, path: str = None) -> str:
+def emit_json(rows, toy: bool, path: str = None, findings=None) -> str:
     """Write the row set to ``BENCH_<rev>.json`` (the comparable artifact
-    ``bench_diff.py`` consumes) and return the path."""
+    ``bench_diff.py`` consumes) and return the path.
+
+    ``findings``: optional per-kind waste-finding counts (e.g. from
+    ``launch/lint.py``'s tier-0 profile) — ``bench_diff.py`` fails on
+    count increases the same way it fails on latency regressions."""
     rev = _git_rev()
     doc = {
         "schema": 1,
@@ -292,6 +296,8 @@ def emit_json(rows, toy: bool, path: str = None) -> str:
         "rows": [{"name": n, "us_per_call": float(us), "note": note}
                  for n, us, note in rows],
     }
+    if findings is not None:
+        doc["findings"] = {str(k): int(v) for k, v in findings.items()}
     if path is None:
         path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             f"BENCH_{rev}.json")

@@ -30,6 +30,13 @@ SCHEMA_VERSION = 1
 # kinds whose fraction estimator is meaningful per-access (Defs. 1-3)
 TIER1_KINDS = ("dead_store", "silent_store", "silent_load")
 
+# the static tier (DESIGN.md § Static tier): findings proven on the
+# closed jaxpr BEFORE compilation by core/jaxpr_lint.py (dead_store,
+# silent_store, redundant_load, dead_param). Checked/flagged counters
+# count candidate equations, so Eq. (1) here estimates the fraction of
+# store/load SITES that are wasteful rather than dynamic accesses.
+TIER_STATIC = 0
+
 # the machine-code attribution tier (DESIGN.md § Kernel tier): findings
 # whose counters were measured INSIDE the serving Pallas kernels at the
 # store site (kernel_silent_store, kernel_dead_store,

@@ -56,10 +56,49 @@ class WasteReport:
         for r in self.recompute[:5]:
             out.append(f"  [dup x{r['copies']}] {r['fingerprint'][:60]} "
                        f"{r['flops']/1e12:.2f} TF")
+        for r in self.reshard_copies[:5]:
+            out.append(f"  [reshard] {r['op']} {r['shape']} "
+                       f"{r['bytes']/1e9:.2f} GB | {r['op_name'][-60:]}")
         return "\n".join(out)
 
 
-def analyze_waste(hlo_text: str, top_k: int = 20) -> WasteReport:
+# ops eligible for duplicate-compute detection; `reduce` joins them only
+# above _REDUCE_DUP_FLOOR operand bytes (small reductions duplicate all
+# over legitimately — epilogues, norms — and cost nothing)
+_DUP_OPS = ("dot", "convolution")
+_REDUCE_DUP_FLOOR = 1e6
+
+# default reshard-copy size floor (bytes after trip-count multiplier)
+RESHARD_THRESHOLD = 64e6
+
+
+def _op_name_of(inst) -> str:
+    m = re.search(r'op_name="([^"]+)"', inst.line)
+    return m.group(1) if m else ""
+
+
+def _operand_provenance(inst, comp) -> str:
+    """Who produced each operand: producer op + its op_name metadata.
+
+    Two *different* matmuls with identical shapes (layer A vs layer B)
+    have operands produced at different source sites, so their
+    provenance strings differ; a true remat/CSE-miss duplicate re-runs
+    the same source expression, so provenance matches. Shapes alone
+    (the old fingerprint) conflated the two."""
+    parts = []
+    for o in inst.operands:
+        prod = comp.producers.get(o)
+        if prod is None:
+            parts.append("arg")
+        else:
+            nm = _op_name_of(prod)
+            parts.append(f"{prod.op}@{nm}" if nm else prod.op)
+    return ";".join(parts)
+
+
+def analyze_waste(hlo_text: str, top_k: int = 20,
+                  reshard_threshold: float = RESHARD_THRESHOLD
+                  ) -> WasteReport:
     cm = HloCostModel(hlo_text)
     mult = cm._multipliers()
     rep = WasteReport()
@@ -117,11 +156,22 @@ def analyze_waste(hlo_text: str, top_k: int = 20) -> WasteReport:
         if m == 0.0:
             continue
         for inst in comp.insts:
-            if inst.op != "dot":
-                continue
+            if inst.op not in _DUP_OPS:
+                if inst.op != "reduce":
+                    continue
+                opbytes = sum(_nbytes(comp.shapes.get(o, ""))
+                              for o in inst.operands)
+                if opbytes * m < _REDUCE_DUP_FLOOR:
+                    continue
             opshapes = ",".join(comp.shapes.get(o, "?").split("{")[0]
                                 for o in inst.operands)
-            fp = f"dot {inst.result_type.split('{')[0]} <- {opshapes}"
+            # shapes AND operand producer provenance: identical shapes
+            # with different producers are different computations, not
+            # recompute (the old shapes-only fingerprint false-flagged
+            # every same-shaped layer pair)
+            prov = _operand_provenance(inst, comp)
+            fp = (f"{inst.op} {inst.result_type.split('{')[0]} <- "
+                  f"{opshapes} [{prov}]")
             c = cm._inst_cost(inst, comp)
             dup[fp].append(c.flops * m)
     rec_total = 0.0
@@ -148,7 +198,7 @@ def analyze_waste(hlo_text: str, top_k: int = 20) -> WasteReport:
             if inst.op not in ("copy", "transpose"):
                 continue
             b = _nbytes(inst.result_type)
-            large = b * m >= 64e6
+            large = b * m >= reshard_threshold
             rep.profile.observe("reshard_copy", large)
             if not large:
                 continue

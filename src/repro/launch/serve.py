@@ -29,6 +29,7 @@ bit-identity assertion).
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -42,6 +43,7 @@ from repro.core.findings import Finding, WasteProfile, merge_profiles
 from repro.core.hlo_waste import analyze_waste
 from repro.core.interpreter import profile_fn
 from repro.core.report import dump_json
+from repro.core.sarif import write_sarif
 from repro.data.synthetic import batch_at
 from repro.models.zoo import build_model
 from repro.serve.decode import make_serve_step
@@ -148,6 +150,7 @@ def _run_legacy(cfg, model, params, prompts, gen, kw):
 def run(arch: str, *, smoke: bool = True, batch: int = 4,
         prompt_len: int = 32, gen: int = 16, seed: int = 0,
         profile: bool = False, profile_out: str = None,
+        sarif_out: str = None,
         kv: str = "dense", page_size: int = 16,
         spec: bool = False, spec_k: int = 4, draft: str = "ngram",
         spec_rollback: bool = True):
@@ -227,6 +230,9 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
         if profile_out:
             dump_json(merged, profile_out)
             print(f"[serve] waste profile written to {profile_out}")
+        if sarif_out:
+            write_sarif(merged, sarif_out, src_root=os.getcwd())
+            print(f"[serve] SARIF findings written to {sarif_out}")
     else:
         merged = None
     # same contract as launch.train.run: (result, merged profile or None)
@@ -257,9 +263,12 @@ def main():
                          "point instead of storing rejected draft rows")
     ap.add_argument("--profile", action="store_true")
     ap.add_argument("--profile-out", default=None)
+    ap.add_argument("--sarif-out", default=None,
+                    help="write the merged waste profile as SARIF 2.1.0")
     a = ap.parse_args()
     run(a.arch, smoke=a.smoke, batch=a.batch, prompt_len=a.prompt_len,
         gen=a.gen, profile=a.profile, profile_out=a.profile_out,
+        sarif_out=a.sarif_out,
         kv=a.kv, page_size=a.page_size, spec=a.spec == "on",
         spec_k=a.spec_k, draft=a.draft,
         spec_rollback=a.spec_rollback == "on")

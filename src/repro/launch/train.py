@@ -11,6 +11,7 @@ CPU smoke:  PYTHONPATH=src python -m repro.launch.train \
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -24,6 +25,7 @@ from repro.core.detectors import TrainingDetectors
 from repro.core.findings import merge_profiles
 from repro.core.hlo_waste import analyze_waste
 from repro.core.report import dump_json
+from repro.core.sarif import write_sarif
 from repro.data.pipeline import Prefetcher
 from repro.data.synthetic import stream
 from repro.launch.mesh import make_host_mesh
@@ -40,7 +42,7 @@ def run(arch: str, *, smoke: bool = True, steps: int = 50, batch: int = 8,
         waste_report: bool = False, resume: bool = False,
         microbatches: int = 1, remat: str = "none", seed: int = 0,
         log_every: int = 10, strategy: str = None, total_steps: int = None,
-        profile_out: str = None):
+        profile_out: str = None, sarif_out: str = None):
     cfg = registry.get_config(arch)
     if smoke:
         cfg = cfg.smoke()
@@ -126,6 +128,9 @@ def run(arch: str, *, smoke: bool = True, steps: int = 50, batch: int = 8,
         if profile_out:
             dump_json(profile_merged, profile_out)
             print(f"[train] waste profile written to {profile_out}")
+        if sarif_out:
+            write_sarif(profile_merged, sarif_out, src_root=os.getcwd())
+            print(f"[train] SARIF findings written to {sarif_out}")
     return losses, profile_merged
 
 
@@ -147,12 +152,14 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--profile-out", default=None,
                     help="write the merged waste profile as JSON")
+    ap.add_argument("--sarif-out", default=None,
+                    help="write the merged waste profile as SARIF 2.1.0")
     a = ap.parse_args()
     run(a.arch, smoke=a.smoke, steps=a.steps, batch=a.batch, seq=a.seq,
         lr=a.lr, ckpt_dir=a.ckpt_dir, ckpt_every=a.ckpt_every,
         profile=a.profile, waste_report=a.waste_report, resume=a.resume,
         microbatches=a.microbatches, remat=a.remat, seed=a.seed,
-        profile_out=a.profile_out)
+        profile_out=a.profile_out, sarif_out=a.sarif_out)
 
 
 if __name__ == "__main__":

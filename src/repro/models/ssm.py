@@ -8,6 +8,7 @@ recurrence. Both paths are validated against each other in tests.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Any, Dict, Optional, Tuple
 
@@ -122,7 +123,10 @@ def _causal_conv(x, w, b, state: Optional[jax.Array] = None):
     else:
         pad = state.astype(x.dtype)
     xp = jnp.concatenate([pad, x], axis=1)                    # (B, S+W-1, ch)
-    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+    # reduce, not builtin sum(): sum() seeds with literal 0, emitting a
+    # full-(B,S,ch) zero-add per layer (tier-0 silent_store, ssm.py)
+    taps = [xp[:, i:i + x.shape[1]] * w[i] for i in range(W)]
+    out = functools.reduce(jnp.add, taps) + b
     new_state = xp[:, x.shape[1]:]                            # last W-1 inputs
     return out, new_state
 

@@ -7,6 +7,7 @@ re-materialized from the master after each update with the model's own
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -56,8 +57,10 @@ def update(tc: TrainConfig, grads: Any, state: AdamWState, master: Any,
 
 def global_norm(tree: Any) -> jax.Array:
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    # reduce, not builtin sum(): sum() seeds with literal 0, emitting a
+    # zero-add equation (tier-0 silent_store finding)
+    sq = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves]
+    return jnp.sqrt(functools.reduce(jnp.add, sq))
 
 
 def clip_by_global_norm(tree: Any, max_norm: float):

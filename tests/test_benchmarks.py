@@ -103,3 +103,44 @@ def test_bench_json_emit_and_diff(tmp_path):
     assert r_bad.returncode == 1 and "REGRESSION" in r_bad.stdout
     r_miss = run(cur_miss)
     assert r_miss.returncode == 1 and "missing" in r_miss.stdout
+
+
+def test_bench_diff_findings_counts(tmp_path):
+    """Per-kind waste-finding counts ride the BENCH json: growth fails,
+    shrinkage is an improvement, count-free baselines only notice."""
+    import json
+    import subprocess
+    import sys
+    mod = _load_overhead()
+    rows = [("overhead.fake_a", 100.0, "")]
+    diff = os.path.join(os.path.dirname(_BENCH), "bench_diff.py")
+    run = lambda b, c: subprocess.run(  # noqa: E731
+        [sys.executable, diff, b, c, "--band", "3.0"],
+        capture_output=True, text=True)
+
+    base = mod.emit_json(rows, toy=True, path=str(tmp_path / "b.json"),
+                         findings={"dead_store": 2, "silent_store": 5})
+    assert json.load(open(base))["findings"] == {"dead_store": 2,
+                                                 "silent_store": 5}
+    same = mod.emit_json(rows, toy=True, path=str(tmp_path / "same.json"),
+                         findings={"dead_store": 2, "silent_store": 5})
+    fewer = mod.emit_json(rows, toy=True, path=str(tmp_path / "less.json"),
+                          findings={"dead_store": 2, "silent_store": 1})
+    grew = mod.emit_json(rows, toy=True, path=str(tmp_path / "grew.json"),
+                         findings={"dead_store": 3, "silent_store": 5})
+    newkind = mod.emit_json(rows, toy=True, path=str(tmp_path / "nk.json"),
+                            findings={"dead_store": 2, "silent_store": 5,
+                                      "redundant_load": 1})
+    nocounts = mod.emit_json(rows, toy=True, path=str(tmp_path / "nc.json"))
+
+    assert run(base, same).returncode == 0
+    r = run(base, fewer)
+    assert r.returncode == 0 and "improved" in r.stdout
+    r = run(base, grew)
+    assert r.returncode == 1 and "findings[dead_store] grew" in r.stdout
+    r = run(base, newkind)
+    assert r.returncode == 1 and "findings[redundant_load]" in r.stdout
+    # current without counts never fails; baseline without counts notices
+    assert run(base, nocounts).returncode == 0
+    r = run(nocounts, base)
+    assert r.returncode == 0 and "note" in r.stdout

@@ -104,3 +104,111 @@ ENTRY %main (p0: f32[4096]) -> f32[4096] {
     rep = analyze_waste(hlo)
     assert rep.totals["redundant_collective_bytes"] > 0
     assert rep.redundant_collectives[0]["copies"] == 2
+
+
+# ---------------------------------------------------------------------
+# recompute fingerprinting (shapes + operand producer provenance)
+# ---------------------------------------------------------------------
+def test_recompute_not_flagged_for_different_producers():
+    """Two matmuls with IDENTICAL shapes but different operand producers
+    are different computations, not recompute (the old shapes-only
+    fingerprint false-flagged every same-shaped layer pair)."""
+    hlo = """
+HloModule m
+
+ENTRY %main (p0: f32[128,128]) -> f32[128,128] {
+  %p0 = f32[128,128]{1,0} parameter(0)
+  %e1 = f32[128,128]{1,0} exponential(%p0)
+  %t1 = f32[128,128]{1,0} tanh(%p0)
+  %d1 = f32[128,128]{1,0} dot(%e1, %e1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %d2 = f32[128,128]{1,0} dot(%t1, %t1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %s = f32[128,128]{1,0} add(%d1, %d2)
+}
+"""
+    rep = analyze_waste(hlo)
+    assert rep.recompute == []
+    assert rep.totals["recompute_flops"] == 0
+
+
+def test_recompute_flagged_for_true_duplicate():
+    hlo = """
+HloModule m
+
+ENTRY %main (p0: f32[128,128]) -> f32[128,128] {
+  %p0 = f32[128,128]{1,0} parameter(0)
+  %e1 = f32[128,128]{1,0} exponential(%p0)
+  %d1 = f32[128,128]{1,0} dot(%e1, %e1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %d2 = f32[128,128]{1,0} dot(%e1, %e1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %s = f32[128,128]{1,0} add(%d1, %d2)
+}
+"""
+    rep = analyze_waste(hlo)
+    assert len(rep.recompute) == 1
+    assert rep.recompute[0]["copies"] == 2
+    assert rep.totals["recompute_flops"] > 0
+
+
+def test_recompute_covers_convolution():
+    hlo = """
+HloModule m
+
+ENTRY %main (p0: f32[1,8,8,4], w: f32[3,3,4,4]) -> f32[1,8,8,4] {
+  %p0 = f32[1,8,8,4]{3,2,1,0} parameter(0)
+  %w = f32[3,3,4,4]{3,2,1,0} parameter(1)
+  %c1 = f32[1,8,8,4]{3,2,1,0} convolution(%p0, %w), window={size=3x3 pad=1_1x1_1}, dim_labels=b01f_01io->b01f
+  %c2 = f32[1,8,8,4]{3,2,1,0} convolution(%p0, %w), window={size=3x3 pad=1_1x1_1}, dim_labels=b01f_01io->b01f
+  ROOT %s = f32[1,8,8,4]{3,2,1,0} add(%c1, %c2)
+}
+"""
+    rep = analyze_waste(hlo)
+    assert len(rep.recompute) == 1
+    assert rep.recompute[0]["fingerprint"].startswith("convolution")
+
+
+def test_recompute_covers_large_reductions_only():
+    hlo = """
+HloModule m
+
+ENTRY %main (p0: f32[500000], q0: f32[16]) -> f32[] {
+  %p0 = f32[500000]{0} parameter(0)
+  %q0 = f32[16]{0} parameter(1)
+  %z = f32[] constant(0)
+  %r1 = f32[] reduce(%p0, %z), dimensions={0}, to_apply=%add
+  %r2 = f32[] reduce(%p0, %z), dimensions={0}, to_apply=%add
+  %s1 = f32[] reduce(%q0, %z), dimensions={0}, to_apply=%add
+  %s2 = f32[] reduce(%q0, %z), dimensions={0}, to_apply=%add
+  %a = f32[] add(%r1, %r2)
+  %b = f32[] add(%s1, %s2)
+  ROOT %out = f32[] add(%a, %b)
+}
+"""
+    rep = analyze_waste(hlo)
+    # the 2 MB reduce duplicates; the 64 B one is below the size floor
+    assert len(rep.recompute) == 1
+    assert rep.recompute[0]["fingerprint"].startswith("reduce")
+    assert "f32[500000]" in rep.recompute[0]["fingerprint"]
+
+
+# ---------------------------------------------------------------------
+# reshard threshold parameter + summary rows
+# ---------------------------------------------------------------------
+_RESHARD_HLO = """
+HloModule m
+
+ENTRY %main (p0: f32[250000]) -> f32[250000] {
+  %p0 = f32[250000]{0} parameter(0)
+  ROOT %cp = f32[250000]{0} copy(%p0), metadata={op_name="jit(f)/reshard"}
+}
+"""
+
+
+def test_reshard_threshold_is_a_parameter_and_summary_prints_rows():
+    # 1 MB copy: under the 64 MB default, over a lowered threshold
+    rep = analyze_waste(_RESHARD_HLO)
+    assert rep.reshard_copies == []
+    rep = analyze_waste(_RESHARD_HLO, reshard_threshold=1e5)
+    assert len(rep.reshard_copies) == 1
+    assert rep.totals["reshard_bytes"] > 0
+    text = rep.summary()
+    assert "[reshard]" in text
+    assert "reshard" in text.split("[reshard]")[1]    # op_name provenance

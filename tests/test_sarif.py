@@ -1,0 +1,137 @@
+"""SARIF 2.1.0 export: schema shape, fingerprint stability, and the
+baseline-waiver round trip over a merged tier-{0,2,3} profile."""
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.findings import Finding, WasteProfile, merge
+from repro.core.hlo_waste import analyze_waste
+from repro.core.jaxpr_lint import lint_fn
+from repro.core.sarif import (finding_fingerprint, to_sarif, write_sarif)
+from repro.launch.lint import baseline_doc, load_baseline, split_new
+
+_HLO_DUP_COLLECTIVE = """
+HloModule m
+
+ENTRY %main (p0: f32[4096]) -> f32[4096] {
+  %p0 = f32[4096]{0} parameter(0)
+  %ag1 = f32[4096]{0} all-gather(%p0), replica_groups=[2,8]<=[16], dimensions={0}
+  %ag2 = f32[4096]{0} all-gather(%p0), replica_groups=[2,8]<=[16], dimensions={0}
+  ROOT %s = f32[4096]{0} add(%ag1, %ag2)
+}
+"""
+
+
+def merged_profile() -> WasteProfile:
+    # tier 0: static lint with real file:line provenance
+    t0 = lint_fn(lambda x: x + 0.0, jnp.ones((4, 4)), subject="probe")
+    # tier 2: HLO analysis of a planted redundant collective
+    t2 = analyze_waste(_HLO_DUP_COLLECTIVE).profile
+    # tier 3: a detector-style finding with a leaf path, no file
+    t3 = WasteProfile(tier=3)
+    t3.add(Finding(kind="silent_store", tier=3, c1=("params/w",),
+                   c2=("train_step",), bytes=128.0,
+                   meta={"path": "params/w"}))
+    return merge(t0, t2, t3)
+
+
+def test_sarif_shape_of_merged_profile():
+    prof = merged_profile()
+    assert sorted(prof.tiers) == [0, 2, 3]
+    doc = to_sarif(prof)
+    assert doc["version"] == "2.1.0"
+    assert "sarif-schema-2.1.0" in doc["$schema"]
+    assert len(doc["runs"]) == 1
+    run = doc["runs"][0]
+    rules = run["tool"]["driver"]["rules"]
+    rule_ids = [r["id"] for r in rules]
+    assert len(rule_ids) == len(set(rule_ids))
+    for r in rules:
+        assert r["shortDescription"]["text"]
+        assert r["help"]["text"]
+    assert len(run["results"]) == len(prof.findings)
+    for res in run["results"]:
+        assert res["ruleId"] in rule_ids
+        assert rules[res["ruleIndex"]]["id"] == res["ruleId"]
+        assert 0 <= res["rank"] <= 100
+        assert res["message"]["text"]
+        loc = res["locations"][0]
+        assert "physicalLocation" in loc or "logicalLocations" in loc
+        assert res["partialFingerprints"]["wasteKey/v1"]
+
+
+def test_sarif_physical_location_from_tier0_provenance():
+    t0 = lint_fn(lambda x: x + 0.0, jnp.ones(4), subject="probe")
+    res = to_sarif(t0)["runs"][0]["results"][0]
+    phys = res["locations"][0]["physicalLocation"]
+    assert phys["artifactLocation"]["uri"].endswith("test_sarif.py")
+    assert phys["region"]["startLine"] > 0
+
+
+def test_sarif_src_root_relativizes_uris():
+    import os
+    t0 = lint_fn(lambda x: x + 0.0, jnp.ones(4), subject="probe")
+    here = os.path.dirname(os.path.abspath(__file__))
+    doc = to_sarif(t0, src_root=here)
+    run = doc["runs"][0]
+    art = run["results"][0]["locations"][0]["physicalLocation"][
+        "artifactLocation"]
+    assert art["uri"] == "test_sarif.py"
+    assert art["uriBaseId"] == "SRCROOT"
+    assert "SRCROOT" in run["originalUriBaseIds"]
+
+
+def test_fingerprints_stable_across_runs_and_magnitudes():
+    f1 = Finding(kind="dead_store", tier=0, c1=("a.py:3:f", "scatter"),
+                 c2=("a.py:9:g",), bytes=100.0, count=1)
+    f2 = Finding(kind="dead_store", tier=0, c1=("a.py:3:f", "scatter"),
+                 c2=("a.py:9:g",), bytes=999999.0, count=77)
+    assert finding_fingerprint(f1) == finding_fingerprint(f2)
+    f3 = Finding(kind="dead_store", tier=0, c1=("a.py:4:f", "scatter"),
+                 c2=("a.py:9:g",))
+    assert finding_fingerprint(f1) != finding_fingerprint(f3)
+    # and the exported doc is deterministic end to end
+    prof = merged_profile()
+    assert to_sarif(prof) == to_sarif(prof)
+
+
+def test_sarif_results_ranked_by_bytes():
+    prof = WasteProfile(tier=0)
+    prof.add(Finding(kind="dead_store", tier=0, c1=("small",), bytes=10.0))
+    prof.add(Finding(kind="dead_store", tier=0, c1=("big",), bytes=1e9))
+    res = to_sarif(prof)["runs"][0]["results"]
+    assert res[0]["properties"]["bytes"] == 1e9
+    assert res[0]["rank"] > res[1]["rank"]
+
+
+def test_write_sarif_round_trips_valid_json(tmp_path):
+    path = str(tmp_path / "out.sarif")
+    doc = write_sarif(merged_profile(), path)
+    with open(path) as fh:
+        assert json.load(fh) == doc
+
+
+def test_unknown_kind_gets_generic_rule():
+    prof = WasteProfile(tier=5)
+    prof.add(Finding(kind="future_waste_kind", tier=5, c1=("x",)))
+    run = to_sarif(prof)["runs"][0]
+    assert run["tool"]["driver"]["rules"][0]["id"] == "future_waste_kind"
+    assert run["results"][0]["ruleId"] == "future_waste_kind"
+
+
+def test_baseline_waiver_suppresses_known_but_not_new(tmp_path):
+    prof = merged_profile()
+    path = str(tmp_path / "baseline.json")
+    with open(path, "w") as fh:
+        json.dump(baseline_doc(prof), fh)
+    waived = load_baseline(path)
+    new, hit = split_new(prof, waived)
+    assert not new and len(hit) == len(prof.findings)
+    # a finding at a NEW site fails the gate
+    prof.add(Finding(kind="dead_store", tier=0, c1=("new_site.py:1:f",),
+                     bytes=4.0))
+    new, _ = split_new(prof, waived)
+    assert len(new) == 1 and new[0].c1 == ("new_site.py:1:f",)
+    # missing baseline file = empty waiver set, everything is new
+    assert load_baseline(str(tmp_path / "nope.json")) == {}

@@ -40,9 +40,11 @@ from repro.configs.base import ProfilerConfig, TrainConfig
 from repro.core.detectors import ServingDetectors, TrainingDetectors
 from repro.core.interpreter import profile_fn
 from repro.models.zoo import build_model
-from repro.serve.decode import make_serve_step
+from repro.launch.fleet import _run_policy
+from repro.serve.decode import StepCache, make_serve_step
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.spec import NGramDrafter, ReplayDrafter
+from repro.serve.workload import make_trace
 from repro.train import state as TS
 from repro.train.step import make_train_step
 
@@ -128,6 +130,52 @@ def run(toy: bool = False):
     rows.extend(run_serve(toy))
     rows.extend(run_spec(toy))
     rows.extend(run_kernels(toy))
+    rows.extend(run_fleet(toy))
+    return rows
+
+
+def run_fleet(toy: bool = False):
+    """Fleet routing A/B: the same duplicated-prefix trace through two
+    replicas under random vs prefix-aware routing (launch/fleet.py).
+    Both policies run the trace on fresh fleets sharing one `StepCache`
+    (identical compiled steps), warmup pass first, so the percentiles
+    compare routing and nothing else. TTFT/TPOT are wall-clock; the
+    notes carry the deterministic side — prefix-hit fraction and the
+    fleet-level Def.-3 ``fleet_silent_prefix_load`` bytes each policy
+    re-paid for prefixes already resident on the other replica."""
+    rows = []
+    cfg = registry.get_config("qwen3-1.7b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    trace = make_trace(n_requests=8 if toy else 16,
+                       vocab_size=cfg.vocab_size, seed=0,
+                       arrival="poisson", rate=0.3, prompt_len=(48, 48),
+                       gen_len=(4, 4), dup_rate=0.8, n_prefixes=1,
+                       prefix_len=40)
+    max_len = trace.max_prompt_len + trace.max_new_tokens + 1
+    step_cache = StepCache(model)
+    out = {}
+    for policy in ("random", "prefix"):
+        fleet, _ = _run_policy(model, params, trace, policy=policy,
+                               replicas=2, slots=2, max_len=max_len,
+                               page_size=8, num_pages=None, seed=0,
+                               step_cache=step_cache)
+        out[policy] = (fleet.latency_summary(), fleet.prefix_hit_fraction(),
+                       fleet.fleet_waste_bytes())
+    (lr, hr, wr), (lp, hp, wp) = out["random"], out["prefix"]
+    rows.append(("overhead.fleet_random_ttft_p50", lr["ttft_p50"] * 1e6,
+                 f"baseline|hit_frac={hr:.2f}"))
+    rows.append(("overhead.fleet_random_ttft_p99", lr["ttft_p99"] * 1e6,
+                 f"waste_bytes={wr:.0f}"))
+    rows.append(("overhead.fleet_random_tpot", lr["tpot_p50"] * 1e6,
+                 "baseline (us/decode tok)"))
+    rows.append(("overhead.fleet_prefix_ttft_p50", lp["ttft_p50"] * 1e6,
+                 f"speedup={lr['ttft_p50'] / max(lp['ttft_p50'], 1e-9):.2f}x"
+                 f"|hit_frac={hp:.2f}"))
+    rows.append(("overhead.fleet_prefix_ttft_p99", lp["ttft_p99"] * 1e6,
+                 f"speedup={lr['ttft_p99'] / max(lp['ttft_p99'], 1e-9):.2f}x"))
+    rows.append(("overhead.fleet_prefix_tpot", lp["tpot_p50"] * 1e6,
+                 f"waste_bytes={wp:.0f}_vs_random={wr:.0f}"))
     return rows
 
 

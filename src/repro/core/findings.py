@@ -330,3 +330,27 @@ def merge(*profiles: WasteProfile) -> WasteProfile:
 
 def merge_profiles(profiles: Iterable[WasteProfile]) -> WasteProfile:
     return merge(*profiles)
+
+
+def merge_fleet(profiles: Dict[str, WasteProfile]) -> WasteProfile:
+    """§5.6 merge across serving-fleet members (replica engines + the
+    router's own fleet-level findings), keyed by member name.
+
+    Findings coalesce exactly as in `merge` — cross-replica sites with
+    the same (kind, tier, C1, C2) add up — but replica attribution is
+    not lost: ``meta["fleet"]`` records each member's finding count and
+    checked/flagged totals, so the fleet report can say which replica
+    contributed what without breaking associative coalescing. The
+    result round-trips through JSON and SARIF like any profile."""
+    out = WasteProfile()
+    summary: Dict[str, Dict[str, int]] = {}
+    for name in sorted(profiles):
+        p = profiles[name]
+        out.merge(p)
+        summary[name] = {
+            "findings": len(p.findings),
+            "checked": int(sum(p.checked.values())),
+            "flagged": int(sum(p.flagged.values())),
+        }
+    out.meta["fleet"] = summary
+    return out

@@ -144,6 +144,18 @@ _RULES: Dict[str, Dict[str, str]] = {
         "help": "Tier 4: verify-kernel store counters; equals 1-accept "
                 "under overwrite and is provably 0 under rollback.",
     },
+    "fleet_silent_prefix_load": {
+        "short": "Fleet-level silent prefix load: prefix re-prefilled on "
+                 "one replica while resident on another",
+        "help": "Paper Def. 3 measured across serving replicas (the "
+                "redundancy fraction of Su et al.'s Redundant Loads, "
+                "OJXPerf's replica-detection framing): at dispatch time "
+                "some replica already held this prompt prefix's KV "
+                "pages, but the routed replica recomputed them. "
+                "Prefix-aware routing through the global prefix tier "
+                "(serve/global_prefix.py) turns the finding into a "
+                "cross-replica cache hit.",
+    },
 }
 
 _TIER_NAMES = {0: "static jaxpr lint", 1: "interpreter", 2: "HLO",

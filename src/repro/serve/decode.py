@@ -21,6 +21,48 @@ import jax.numpy as jnp
 from repro.sharding.ctx import sharding_ctx
 
 
+class StepCache:
+    """Shared jitted engine steps for a replica fleet.
+
+    `jax.jit` caches per function OBJECT, so N `ServeEngine`s built the
+    plain way compile the tick/prefill/verify factories N times over —
+    pure compile-time waste for replicas serving the same model (they
+    already share one weight arena). A fleet builds one StepCache and
+    passes it to every `ServeEngine(step_cache=...)`; each distinct
+    (kind, paged, rollback) combination compiles once and every replica
+    dispatches through the same executable. Also what makes routing-
+    policy A/B timing honest: both fleets run literally the same
+    compiled code."""
+
+    def __init__(self, model, strategy=None):
+        self.model = model
+        self.strategy = strategy
+        self._fns = {}
+
+    def get(self, kind: str, *, paged: bool = False,
+            rollback: bool = False):
+        key = (kind, bool(paged), bool(rollback))
+        fn = self._fns.get(key)
+        if fn is None:
+            if kind == "tick":
+                fn = jax.jit(make_engine_tick(self.model, self.strategy,
+                                              paged=paged))
+            elif kind == "prefill":
+                fn = jax.jit(make_engine_prefill(self.model, self.strategy,
+                                                 paged=paged))
+            elif kind == "verify":
+                fn = jax.jit(make_engine_verify(self.model, self.strategy,
+                                                paged=paged,
+                                                rollback=rollback))
+            elif kind == "page_copy":
+                from repro.serve.kv_cache import make_page_copy
+                fn = jax.jit(make_page_copy())
+            else:
+                raise ValueError(f"unknown step kind {kind!r}")
+            self._fns[key] = fn
+        return fn
+
+
 def make_serve_step(model, strategy=None, greedy: bool = True):
     sharder = strategy.sharder() if strategy is not None else None
 

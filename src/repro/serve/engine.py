@@ -70,14 +70,41 @@ class Request:
     tokens: np.ndarray                 # (L,) int32 prompt
     max_new_tokens: int = 16
     arrival: int = 0                   # earliest engine step for admission
+    # (length, pages) of this prompt's prefix in THIS replica's pool,
+    # leased by the fleet router from the global prefix tier at dispatch
+    # (serve/global_prefix.py); the engine consumes it at admission and
+    # releases the lease
+    prefix_hint: Optional[Any] = None
     # filled by the engine:
     generated: List[int] = field(default_factory=list)
     prefill_step: int = -1
     finish_step: int = -1
+    reuse_len: int = 0                 # cached-prefix tokens mapped in
 
     @property
     def done(self) -> bool:
         return self.finish_step >= 0
+
+
+class MonotonicStats(dict):
+    """Engine counters that can only grow.
+
+    The fleet aggregator (serve/router.py, benchmarks) reads periodic
+    snapshots and sums per-replica DELTAS, so a counter that ever
+    decreased — e.g. zeroed during a recycle sweep between generations —
+    silently undercounts fleet totals (`padded_prefill_tokens` across
+    generations was the reported symptom). Decrements now raise instead
+    of corrupting downstream accounting; `dict(stats)` snapshots keep
+    working."""
+
+    def __setitem__(self, key, value):
+        cur = self.get(key)
+        if (cur is not None and isinstance(cur, (int, float))
+                and isinstance(value, (int, float)) and value < cur):
+            raise ValueError(
+                f"engine stat {key!r} may not decrease ({cur} -> {value}); "
+                f"fleet aggregation reads monotonic snapshots")
+        super().__setitem__(key, value)
 
 
 def _bucket(n: int, lo: int = 8) -> int:
@@ -99,7 +126,8 @@ class ServeEngine:
                  prefix_window: int = 32, strategy=None,
                  drafter=None, spec_k: int = 4,
                  spec_rollback: bool = True,
-                 kernel_counters: bool = False):
+                 kernel_counters: bool = False,
+                 step_cache=None):
         if model.cfg.family not in ENGINE_FAMILIES:
             raise ValueError(
                 f"ServeEngine needs an indexed KV cache in every block; "
@@ -142,7 +170,9 @@ class ServeEngine:
                 params, num_slots, max_len, page_size=page_size,
                 num_pages=num_pages, kv_dtype=kv_dtype,
                 kernel_counters=self.kernel_counters)
-            self._copy_fn = jax.jit(make_page_copy())
+            self._copy_fn = (step_cache.get("page_copy")
+                             if step_cache is not None
+                             else jax.jit(make_page_copy()))
         else:
             self.kv = None
             cache = model.init_cache(params, num_slots, max_len,
@@ -156,29 +186,43 @@ class ServeEngine:
         self._queue: Deque[Request] = deque()
         self.finished: Dict[str, Request] = {}
         self.step_no = 0
-        self.stats = {"prefill_tokens": 0, "decode_tokens": 0,
-                      "prefill_s": 0.0, "decode_s": 0.0, "ticks": 0,
-                      "prefills": 0,
-                      # prompt tokens actually pushed through the model
-                      # (< prefill_tokens when prefixes hit the cache)
-                      "prefill_computed_tokens": 0,
-                      # padded-garbage positions the bucketed prefill
-                      # burned (whole-batch sweep minus useful suffixes)
-                      "padded_prefill_tokens": 0,
-                      "prefix_hits": 0, "prefix_hit_tokens": 0,
-                      "cow_copies": 0, "pages_freed": 0,
-                      # speculative decode accounting
-                      "spec_ticks": 0, "draft_proposed": 0,
-                      "draft_accepted": 0, "draft_s": 0.0,
-                      "verify_s": 0.0, "verified_positions": 0}
+        self.stats = MonotonicStats(
+            {"prefill_tokens": 0, "decode_tokens": 0,
+             "prefill_s": 0.0, "decode_s": 0.0, "ticks": 0,
+             "prefills": 0,
+             # prompt tokens actually pushed through the model
+             # (< prefill_tokens when prefixes hit the cache)
+             "prefill_computed_tokens": 0,
+             # padded-garbage positions the bucketed prefill
+             # burned (whole-batch sweep minus useful suffixes)
+             "padded_prefill_tokens": 0,
+             "prefix_hits": 0, "prefix_hit_tokens": 0,
+             "cow_copies": 0, "pages_freed": 0,
+             # admissions pushed back by pool pressure (the router's
+             # preemption signal: it frees global-prefix pins and the
+             # deferred request retries next tick)
+             "admit_deferred": 0,
+             # speculative decode accounting
+             "spec_ticks": 0, "draft_proposed": 0,
+             "draft_accepted": 0, "draft_s": 0.0,
+             "verify_s": 0.0, "verified_positions": 0})
 
-        self._tick_fn = jax.jit(
-            make_engine_tick(model, strategy, paged=self.paged))
-        self._prefill_fn = jax.jit(
-            make_engine_prefill(model, strategy, paged=self.paged))
-        self._verify_fn = jax.jit(make_engine_verify(
-            model, strategy, paged=self.paged,
-            rollback=self.spec_rollback)) if self.spec else None
+        if step_cache is not None:
+            assert step_cache.model is model, \
+                "step_cache was built for a different model"
+            self._tick_fn = step_cache.get("tick", paged=self.paged)
+            self._prefill_fn = step_cache.get("prefill", paged=self.paged)
+            self._verify_fn = step_cache.get(
+                "verify", paged=self.paged,
+                rollback=self.spec_rollback) if self.spec else None
+        else:
+            self._tick_fn = jax.jit(
+                make_engine_tick(model, strategy, paged=self.paged))
+            self._prefill_fn = jax.jit(
+                make_engine_prefill(model, strategy, paged=self.paged))
+            self._verify_fn = jax.jit(make_engine_verify(
+                model, strategy, paged=self.paged,
+                rollback=self.spec_rollback)) if self.spec else None
 
         # detector geometry: the KV sub-blocks of one scanned superblock
         main = self.cache["main"]
@@ -241,12 +285,26 @@ class ServeEngine:
     def pending(self) -> int:
         return len(self._queue) + sum(r is not None for r in self.slots)
 
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    @property
+    def live_slots(self) -> int:
+        return sum(r is not None for r in self.slots)
+
     def _note_freed(self, freed: List[int]) -> None:
         """Every page-freeing path goes through here: count the frees
         AND disarm the detectors' now-stale traps on them."""
         self.stats["pages_freed"] += len(freed)
         if self.detectors is not None and freed:
             self.detectors.on_page_free(freed)
+
+    def note_freed(self, freed: List[int]) -> None:
+        """Pages freed by an EXTERNAL holder of this replica's pool —
+        the fleet's global prefix tier dropping its pins — still need
+        their frees counted and their stale traps disarmed here."""
+        self._note_freed([int(p) for p in freed])
 
     def _accept_token(self, slot: int, req: Request, tok: int) -> None:
         req.generated.append(int(tok))
@@ -294,17 +352,26 @@ class ServeEngine:
             if self.paged:
                 budget = min(req.max_new_tokens, self.max_len - L)
                 try:
-                    plan = self.kv.admit(b, req.tokens, budget)
+                    plan = self.kv.admit(b, req.tokens, budget,
+                                         hint=req.prefix_hint)
                 except PoolExhausted as e:
                     # pool pressure: defer this (and following) requests;
                     # pages the failed eviction pass DID free still need
-                    # their stale traps disarmed
+                    # their stale traps disarmed. The dispatch lease (if
+                    # any) stays held for the retry.
                     self._note_freed(e.freed)
+                    self.stats["admit_deferred"] += 1
                     self._queue.extendleft(
                         reversed(group[len(admitted):]))
                     break
+                if req.prefix_hint is not None:
+                    # admit pinned whatever it mapped; the dispatch-time
+                    # lease has done its job
+                    self._note_freed(self.kv.release(req.prefix_hint[1]))
+                    req.prefix_hint = None
                 plans[b] = plan
                 starts[b] = plan.reuse_len
+                req.reuse_len = plan.reuse_len
                 if plan.reuse_len:
                     self.stats["prefix_hits"] += 1
                     self.stats["prefix_hit_tokens"] += plan.reuse_len

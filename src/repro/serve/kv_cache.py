@@ -152,6 +152,12 @@ class PrefixIndex:
         self.page_size = page_size
         self.window = max(1, window)
         self._entries: "OrderedDict[str, _Entry]" = OrderedDict()
+        # refcount of registered entry LENGTHS: a donor's full prompt can
+        # end mid-bucket (neither a pow2 nor a page boundary), where the
+        # candidate ladder alone would never probe it — the OJXPerf
+        # "different granularity boundaries" gap. `probe_lengths` adds
+        # every registered length as a final partial-boundary probe.
+        self._lengths: Dict[int, int] = {}
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -160,17 +166,34 @@ class PrefixIndex:
     def _key(length: int, tokens: np.ndarray) -> str:
         return f"{length}:{_digest(tokens[:length])}"
 
+    def probe_lengths(self, n: int) -> List[int]:
+        """Prefix lengths `match` probes for an n-token prompt: the
+        pow2+page candidate ladder PLUS every length some entry was
+        actually registered at (bounded by the LRU window), so a prefix
+        ending mid-bucket still dedups."""
+        cands = set(prefix_candidates(n, self.page_size))
+        cands.update(L for L in self._lengths if L < n)
+        return sorted(cands)
+
     def match(self, tokens: np.ndarray) -> Tuple[int, Tuple[int, ...]]:
         """Longest indexed prefix of `tokens`: (length, pages) or (0, ())."""
         tokens = np.asarray(tokens)
         best_len, best_pages = 0, ()
-        for cand in prefix_candidates(tokens.size, self.page_size):
+        for cand in self.probe_lengths(tokens.size):
             key = self._key(cand, tokens)
             e = self._entries.get(key)
             if e is not None and cand > best_len:
                 best_len, best_pages = e.length, e.pages
                 self._entries.move_to_end(key)
         return best_len, best_pages
+
+    def lookup(self, tokens: np.ndarray,
+               length: int) -> Optional[Tuple[int, ...]]:
+        """Pages of the exact-length entry for tokens[:length], or None
+        (no LRU touch). The fleet's global tier mirrors local entries
+        through this instead of reaching into the table."""
+        e = self._entries.get(self._key(length, np.asarray(tokens)))
+        return e.pages if e is not None else None
 
     def register(self, tokens: np.ndarray,
                  pages: Sequence[int]) -> List[int]:
@@ -192,6 +215,7 @@ class PrefixIndex:
             pinned = tuple(int(p) for p in pages[:need])
             self.alloc.incref(pinned)
             self._entries[key] = _Entry(cand, pinned)
+            self._lengths[cand] = self._lengths.get(cand, 0) + 1
             while len(self._entries) > self.window:
                 freed += self.evict_one() or []
         return freed
@@ -214,6 +238,9 @@ class PrefixIndex:
                     key = k
                     break
         e = self._entries.pop(key)
+        self._lengths[e.length] -= 1
+        if not self._lengths[e.length]:
+            del self._lengths[e.length]
         return self.alloc.decref(e.pages)
 
     def clear(self) -> List[int]:
@@ -259,20 +286,37 @@ class PagedKV:
         self.pt = np.full((num_slots, max_pages_per_slot), -1, np.int32)
 
     # ------------------------------------------------------------------
-    def admit(self, slot: int, tokens: np.ndarray, budget: int) -> AdmitPlan:
+    def admit(self, slot: int, tokens: np.ndarray, budget: int,
+              hint: Optional[Tuple[int, Tuple[int, ...]]] = None
+              ) -> AdmitPlan:
         """Map a new request into `slot`: longest cached prefix shared
         page-for-page, a partially reused page copied-on-write, fresh
         pages for the rest of [0, len(tokens)+budget).
 
         `budget` is the request's generation allowance; pages covering
         prompt+budget are allocated up front so decode never faults.
-        Raises PoolExhausted when eviction cannot free enough pages."""
+        Raises PoolExhausted when eviction cannot free enough pages.
+
+        `hint` is a (length, pages) prefix mapping from the fleet's
+        global prefix tier (serve/global_prefix.py): pages of THIS pool
+        holding tokens[:length], leased (incref'd) by the router at
+        dispatch so they stay live and immutable even if the local LRU
+        index has since forgotten the entry. Used when it beats the
+        local match; ignored when stale (an unreferenced page means the
+        lease protocol was violated, so that is asserted, not risked)."""
         tokens = np.asarray(tokens)
         L = int(tokens.size)
         ps = self.page_size
         assert np.all(self.pt[slot] < 0), f"slot {slot} still mapped"
 
         match_len, donor = self.index.match(tokens)
+        if hint is not None:
+            h_len, h_pages = int(hint[0]), tuple(int(p) for p in hint[1])
+            h_len = min(h_len, L)
+            if h_len > match_len and h_len <= len(h_pages) * ps:
+                assert all(self.alloc.refcount[p] > 0 for p in h_pages), \
+                    "global-prefix hint maps an unreferenced page"
+                match_len, donor = h_len, h_pages
         # the last prompt position is always recomputed: its logits seed
         # the continuation and hidden states are not cached
         reuse = min(match_len, L - 1)
@@ -352,10 +396,15 @@ class PagedKV:
             return -1, off
         return int(self.pt[slot, page_i]), off
 
-    def check(self) -> None:
-        """Cross-structure invariants (property tests drive this)."""
+    def check(self, extra_holders: Optional[Dict[int, int]] = None) -> None:
+        """Cross-structure invariants (property tests drive this).
+
+        `extra_holders` maps page -> reference count held by parties
+        outside this heap (the fleet's global prefix tier pins and
+        in-flight dispatch leases), so the audit stays exact when the
+        pool is shared across the replica group."""
         self.alloc.check()
-        refs: Dict[int, int] = {}
+        refs: Dict[int, int] = dict(extra_holders or {})
         for b in range(self.num_slots):
             for p in self.pt[b]:
                 if p >= 0:

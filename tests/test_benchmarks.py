@@ -32,6 +32,12 @@ EXPECTED_ROWS = {
     "overhead.kernel_paged_decode_pallas",
     "overhead.kernel_prefill_pallas",
     "overhead.kernel_verify_pallas",
+    "overhead.fleet_random_ttft_p50",
+    "overhead.fleet_random_ttft_p99",
+    "overhead.fleet_random_tpot",
+    "overhead.fleet_prefix_ttft_p50",
+    "overhead.fleet_prefix_ttft_p99",
+    "overhead.fleet_prefix_tpot",
 }
 
 
@@ -72,6 +78,12 @@ def test_every_overhead_row_runs_at_toy_sizes():
     speedup = float(dec.split("modeled_hbm_speedup=")[1].split("x")[0])
     assert speedup >= 1.3, dec
     assert "defer_zero_stores=True" in notes["overhead.kernel_verify_pallas"]
+    # fleet A/B: the waste counts are logical-tick deterministic — the
+    # prefix-aware policy must re-pay zero cross-replica prefix bytes
+    # while random routing pays some
+    fl = notes["overhead.fleet_prefix_tpot"]
+    assert fl.startswith("waste_bytes=0_vs_random="), fl
+    assert not fl.endswith("_vs_random=0"), fl
 
 
 def test_bench_json_emit_and_diff(tmp_path):

@@ -361,3 +361,40 @@ def test_paged_engine_padding_waste_accounting():
     # one admission: 2 slots x bucket(5)=8 padded positions, 5 useful
     assert eng.stats["prefill_computed_tokens"] == 5
     assert eng.stats["padded_prefill_tokens"] == 2 * 8 - 5
+
+
+def test_prefix_match_probes_partial_granularity_boundaries():
+    """Granularity-boundary regression (fleet satellite): a donor prompt
+    ending mid-bucket — 37 tokens at page_size 16 is neither a pow2 nor
+    a page boundary — was only findable through the candidate ladder,
+    which caps a 45-token follower's probe at 32 and silently re-pays 5
+    tokens. `probe_lengths` now adds every registered entry length as a
+    final partial-boundary probe, so the follower reuses all 37."""
+    ps = 16
+    kv = PagedKV(num_slots=2, page_size=ps, num_pages=16,
+                 max_pages_per_slot=4)
+    rng = np.random.RandomState(0)
+    donor = rng.randint(0, 100, size=37).astype(np.int32)
+    kv.admit(0, donor, budget=3)
+    kv.register_prefix(0, donor)
+
+    # the ladder alone stops at 32: the gap this fix closes
+    assert max(c for c in prefix_candidates(45, ps) if c <= 37) == 32
+    assert 37 in kv.index.probe_lengths(45)
+
+    follower = np.concatenate([donor,
+                               rng.randint(0, 100, 8).astype(np.int32)])
+    plan = kv.admit(1, follower, budget=3)
+    kv.release(plan.cow_pins)
+    assert plan.reuse_len == 37, \
+        f"partial-boundary prefix re-paid: reused {plan.reuse_len}/37"
+    kv.check()
+
+    # the registered-length table is refcounted: once every entry at 37
+    # is gone, the probe ladder shrinks back to the pure candidates
+    kv.free_slot(0)
+    kv.free_slot(1)
+    kv.index.clear()
+    assert kv.index.probe_lengths(45) == prefix_candidates(45, ps)
+    kv.check()
+    assert kv.alloc.free_count == 16

@@ -292,3 +292,41 @@ def test_engine_rejects_unindexed_families():
     params = model.init(KEY)
     with pytest.raises(ValueError):
         ServeEngine(model, params, num_slots=2, max_len=16)
+
+
+def test_engine_stats_monotonic_across_generations():
+    """Satellite of the fleet tier: the router and the fleet benchmarks
+    aggregate per-replica counters by snapshot deltas, which silently
+    undercounts if any counter ever decreases (the historical symptom:
+    padded_prefill_tokens zeroed between waves). Stats are now
+    `MonotonicStats`: every numeric key is non-decreasing across full
+    serve generations with slot recycling, and an explicit decrement
+    raises instead of corrupting fleet accounting."""
+    cfg, model, params = _model()
+    eng = ServeEngine(model, params, num_slots=2, max_len=24,
+                      kv_layout="paged", page_size=8)
+    rng = np.random.RandomState(3)
+    snap = dict(eng.stats)
+    for wave in range(3):
+        for b in range(3):     # 3 requests > 2 slots: recycling each wave
+            eng.submit(Request(
+                rid=f"w{wave}r{b}",
+                tokens=rng.randint(0, cfg.vocab_size,
+                                   size=rng.randint(6, 16)).astype(np.int32),
+                max_new_tokens=2 + b))
+        eng.run(max_steps=300)
+        for k, v in snap.items():
+            if isinstance(v, (int, float)):
+                assert eng.stats[k] >= v, \
+                    f"stat {k} decreased across generations: {v} -> " \
+                    f"{eng.stats[k]}"
+        snap = dict(eng.stats)
+    assert eng.stats["prefill_tokens"] > 0 and eng.stats["ticks"] > 0
+
+    with pytest.raises(ValueError, match="may not decrease"):
+        eng.stats["ticks"] = eng.stats["ticks"] - 1
+    eng.stats["ticks"] = eng.stats["ticks"]          # equal is fine
+    eng.stats["new_gauge"] = 1.5                     # fresh keys are fine
+    before = dict(eng.stats)
+    eng.stats["new_gauge"] += 1
+    assert eng.stats["new_gauge"] == 2.5 and before["new_gauge"] == 1.5

@@ -131,6 +131,57 @@ def run(toy: bool = False):
     rows.extend(run_spec(toy))
     rows.extend(run_kernels(toy))
     rows.extend(run_fleet(toy))
+    rows.extend(run_objects(toy))
+    return rows
+
+
+def run_objects(toy: bool = False):
+    """Object tier (DESIGN.md § Object tier): registry bookkeeping on
+    the serving hot path, and the replica scan.
+
+    The registry inserts one dict entry per page alloc and nothing per
+    decode step, so the decode-tick slowdown with the registry attached
+    must sit inside the Tier-3 production envelope (<= 1.07x — the
+    paper's 7% claim is the budget the object tier shares). The scan row
+    is analysis-time (off the serving path): content-hash every live
+    object once, sampled above 64 KB."""
+    from repro.core.objects import ObjectRegistry
+    from repro.core.replicas import ReplicaDetector
+
+    rows = []
+    cfg = registry.get_config("qwen3-1.7b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, P = 4, 16 if toy else 32
+    max_len = 64 if toy else 256
+    step_cache = StepCache(model)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, size=P).astype(np.int32)
+               for _ in range(B)]
+
+    def mk(reg):
+        eng = ServeEngine(model, params, num_slots=B, max_len=max_len,
+                          kv_layout="paged", step_cache=step_cache,
+                          registry=reg, owner="bench")
+        for b in range(B):
+            eng.submit(Request(rid=f"r{b}", tokens=prompts[b].copy(),
+                               max_new_tokens=max_len))
+        eng._admit()
+        for _ in range(2 if toy else 4):        # warm jits
+            eng._decode_tick()
+        return eng
+
+    nt = 2 if toy else 10
+    t_off = _time(mk(None)._decode_tick, n=nt)
+    reg = ObjectRegistry()
+    eng = mk(reg)
+    t_on = _time(eng._decode_tick, n=nt)
+    rows.append(("overhead.object_decode_step", t_on * 1e6,
+                 f"slowdown={t_on/t_off:.3f}x|envelope<=1.07"))
+    t_scan = _time(lambda: ReplicaDetector(reg).scan(), n=nt)
+    scan = ReplicaDetector(reg).scan()
+    rows.append(("overhead.object_replica_scan", t_scan * 1e6,
+                 f"objects={len(reg)}|groups={len(scan.findings)}"))
     return rows
 
 

@@ -44,6 +44,12 @@ TIER_STATIC = 0
 # kinds the Eq. (1) estimator returns the exact fraction, not a sample.
 TIER_KERNEL = 4
 
+# the object tier (DESIGN.md § Object tier): DJXPerf-style aggregation
+# by allocation (core/objects.py registry) and OJXPerf-style replica
+# findings (core/replicas.py) — replica_kv_page / replica_param /
+# replica_opt_state, each naming the dedup that eliminates it.
+TIER_OBJECT = 5
+
 
 def _fmax(a: float, b: float) -> float:
     """NaN-robust max: prefer the non-NaN operand (both NaN -> NaN).
@@ -128,6 +134,13 @@ class WasteProfile:
         self.totals: Dict[str, float] = {}
         self.watchpoint_stats: Dict[str, Dict[str, int]] = {}
         self.meta: Dict[str, Any] = {}
+        # DJXPerf object table: object_key (kind|name|alloc-site, see
+        # core/objects.py) -> {"kind","name","site","nbytes","count",
+        # "waste": {waste_kind: bytes}}. Any tier can bill waste bytes
+        # to an object; rows merge additively (waste/count add, nbytes
+        # is a size so merge takes the NaN-robust max) which keeps the
+        # §5.6 merge associative and commutative over objects too.
+        self.objects: Dict[str, Dict[str, Any]] = {}
 
     # -- findings ------------------------------------------------------
     @property
@@ -159,8 +172,55 @@ class WasteProfile:
     def bump_total(self, key: str, amount: float) -> None:
         self.totals[key] = self.totals.get(key, 0) + amount
 
+    # -- object table (DJXPerf aggregation) ----------------------------
+    def bill_object(self, obj, waste_kind: str, nbytes: float,
+                    count: int = 1) -> Dict[str, Any]:
+        """Bill ``nbytes`` of ``waste_kind`` waste to an object.
+
+        ``obj`` is an ``ObjectRecord`` (core/objects.py) or a row dict
+        from another profile's object table; either way the row is keyed
+        by the stable object key so repeated bills and cross-profile
+        merges coalesce."""
+        if isinstance(obj, dict):
+            key = obj["key"]
+            row = self.objects.setdefault(key, {
+                "key": key, "kind": obj["kind"], "name": obj["name"],
+                "site": obj["site"], "nbytes": float(obj["nbytes"]),
+                "count": 0, "waste": {}})
+        else:
+            key = obj.object_key
+            row = self.objects.setdefault(key, {
+                "key": key, "kind": obj.kind, "name": obj.name,
+                "site": obj.site, "nbytes": float(obj.nbytes),
+                "count": 0, "waste": {}})
+        row["nbytes"] = _fmax(row["nbytes"], float(
+            obj["nbytes"] if isinstance(obj, dict) else obj.nbytes))
+        row["count"] += int(count)
+        row["waste"][waste_kind] = (row["waste"].get(waste_kind, 0.0)
+                                    + float(nbytes))
+        return row
+
+    def top_objects(self, k: int = 10) -> List[Dict[str, Any]]:
+        """Object rows by total attributed waste bytes, descending."""
+        rows = sorted(self.objects.values(),
+                      key=lambda r: (-sum(r["waste"].values()), r["key"]))
+        return rows[:k]
+
+    def _absorb_object(self, row: Dict[str, Any]) -> None:
+        cur = self.objects.get(row["key"])
+        if cur is None:
+            self.objects[row["key"]] = {**row, "waste": dict(row["waste"])}
+            return
+        cur["nbytes"] = _fmax(float(cur["nbytes"]), float(row["nbytes"]))
+        cur["count"] += int(row["count"])
+        for k, v in row["waste"].items():
+            cur["waste"][k] = cur["waste"].get(k, 0.0) + float(v)
+
     # -- estimators ----------------------------------------------------
     def fractions(self) -> Dict[str, float]:
+        # `if v` is a guard, not style: a zero-event kind (cold engine,
+        # empty object tier) must drop out of the estimator entirely
+        # rather than divide by zero and leak NaN into JSON/SARIF
         out = {k: self.flagged.get(k, 0) / v
                for k, v in self.checked.items() if v}
         for k in TIER1_KINDS:            # always present for tier-1 readers
@@ -232,6 +292,8 @@ class WasteProfile:
             mine = self.watchpoint_stats.setdefault(cls, {})
             for k, v in st.items():
                 mine[k] = mine.get(k, 0) + v
+        for row in other.objects.values():
+            self._absorb_object(row)
         for k, v in other.meta.items():
             self.meta.setdefault(k, v)
         return self
@@ -248,6 +310,8 @@ class WasteProfile:
             "watchpoint_stats": {k: dict(sorted(v.items())) for k, v in
                                  sorted(self.watchpoint_stats.items())},
             "meta": dict(sorted(self.meta.items())),
+            "objects": {k: {**row, "waste": dict(sorted(row["waste"].items()))}
+                        for k, row in sorted(self.objects.items())},
             "findings": [f.to_dict() for f in
                          sorted(self._index.values(),
                                 key=lambda f: (f.kind, f.tier, f.c1, f.c2))],
@@ -268,6 +332,14 @@ class WasteProfile:
                               for k, v in d.get("watchpoint_stats",
                                                 {}).items()}
         p.meta = dict(d.get("meta", {}))
+        for k, row in d.get("objects", {}).items():
+            p.objects[k] = {
+                "key": row.get("key", k), "kind": row["kind"],
+                "name": row["name"], "site": row["site"],
+                "nbytes": float(row["nbytes"]),
+                "count": int(row.get("count", 0)),
+                "waste": {wk: float(wv)
+                          for wk, wv in row.get("waste", {}).items()}}
         for fd in d.get("findings", []):
             f = Finding.from_dict(fd)
             p._index[f.key] = f
@@ -288,7 +360,12 @@ class WasteProfile:
                 f"fractions={self.fractions()})")
 
     # -- rendering -----------------------------------------------------
-    def render(self, top_k: int = 5) -> str:
+    def render(self, top_k: int = 5, by: str = "kind") -> str:
+        if by == "object":
+            return self._render_objects(top_k)
+        if by != "kind":
+            raise ValueError(f"render(by=...) wants 'kind' or 'object', "
+                             f"not {by!r}")
         fr = self.fractions()
         tiers = ",".join(str(t) for t in self.tiers) or "-"
         lines = [f"== JXPerf-JAX waste profile (tiers {tiers}) =="]
@@ -316,6 +393,33 @@ class WasteProfile:
                         else f"{f.flops / 1e12:.2f} TF" if f.flops
                         else f"{f.fraction:.0%}")
                 lines.append(f"    x{f.count:<5d} {cost:>10s}  {f.path}")
+        return "\n".join(lines)
+
+    def _render_objects(self, top_k: int) -> str:
+        """DJXPerf-style top-objects table: waste billed per allocation,
+        ranked by attributed bytes, with the allocation site inline.
+
+        A cold engine legitimately has an empty (or waste-free) object
+        table — render zero rows, never a division by an absent
+        denominator (object "fractions" are waste/nbytes and nbytes can
+        be 0 for lazily-sized objects)."""
+        lines = [f"== top objects by attributed waste "
+                 f"({len(self.objects)} registered) =="]
+        rows = [r for r in self.top_objects(top_k)
+                if sum(r["waste"].values()) > 0]
+        if not rows:
+            lines.append("  (no object-attributed waste)")
+            return "\n".join(lines)
+        for r in rows:
+            waste = sum(r["waste"].values())
+            nbytes = r["nbytes"]
+            frac = (f"{waste / nbytes:7.1%}"
+                    if nbytes and not math.isnan(nbytes) else "      -")
+            kinds = ", ".join(f"{k} {v / 1e3:.1f}KB"
+                              for k, v in sorted(r["waste"].items()))
+            lines.append(f"  {waste / 1e3:10.1f} KB {frac} "
+                         f"{r['kind']:13s} {r['name']}")
+            lines.append(f"      @ {r['site']}  [{kinds}] x{r['count']}")
         return "\n".join(lines)
 
 

@@ -156,10 +156,40 @@ _RULES: Dict[str, Dict[str, str]] = {
                 "(serve/global_prefix.py) turns the finding into a "
                 "cross-replica cache hit.",
     },
+    "replica_kv_page": {
+        "short": "Bit-identical KV pool pages (dedup opportunity)",
+        "help": "Object tier (OJXPerf replica detection): content "
+                "digests of live KV pages collide across the fleet — "
+                "duplicated prefixes the PrefixIndex missed (same-burst "
+                "admissions registered after prefill, or reuse cut at "
+                "mismatched page-granularity boundaries). The result's "
+                "location is the duplicate page's allocation site "
+                "(PageAllocator.alloc). Fix: content-addressed page "
+                "dedup (content_dedup on router + engine).",
+    },
+    "replica_param": {
+        "short": "Weight tensors replicated across serving replicas",
+        "help": "Object tier (OJXPerf replica detection): the same "
+                "parameter bytes live once per replica. Fix: a shared "
+                "weight arena mapped once per host, replicas get views.",
+    },
+    "replica_opt_state": {
+        "short": "Bit-identical optimizer-state leaves",
+        "help": "Object tier (OJXPerf replica detection): optimizer "
+                "moments that are byte-equal (typically still "
+                "zero-initialized). Fix: dedup or lazy-materialize on "
+                "first nonzero update.",
+    },
+    "replica_draft_window": {
+        "short": "Bit-identical speculative draft windows",
+        "help": "Object tier (OJXPerf replica detection): per-slot "
+                "draft windows holding the same proposal bytes.",
+    },
 }
 
 _TIER_NAMES = {0: "static jaxpr lint", 1: "interpreter", 2: "HLO",
-               3: "detectors", 4: "kernel counters"}
+               3: "detectors", 4: "kernel counters",
+               5: "object replicas"}
 
 
 def finding_fingerprint(f: Finding) -> str:

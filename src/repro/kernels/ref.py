@@ -39,7 +39,13 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     mask = None
     if causal:
-        qpos = jnp.asarray(q_offset)[..., None] + jnp.arange(Sq)
+        if isinstance(q_offset, int) and q_offset == 0:
+            # training/prefill-from-scratch call: adding the static 0
+            # offset would emit a full-(Sq,) identity add against literal
+            # 0 (tier-0 silent_store, ref.py) — same (Sq,) qpos either way
+            qpos = jnp.arange(Sq)
+        else:
+            qpos = jnp.asarray(q_offset)[..., None] + jnp.arange(Sq)
         mask = qpos[..., :, None] >= jnp.arange(Skv)   # (Sq,Skv) | (B,Sq,Skv)
     if kv_len is not None:
         lmask = jnp.arange(Skv) < jnp.asarray(kv_len)[..., None]

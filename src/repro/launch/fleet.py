@@ -34,6 +34,8 @@ from repro.configs import registry
 from repro.configs.base import ProfilerConfig
 from repro.core.detectors import ServingDetectors
 from repro.core.findings import merge_fleet
+from repro.core.objects import ObjectRegistry, register_tree
+from repro.core.replicas import ReplicaDetector, cross_replica_bytes
 from repro.core.report import dump_json
 from repro.core.sarif import write_sarif
 from repro.models.zoo import build_model
@@ -51,7 +53,8 @@ DEF = dict(replicas=2, slots=2, page_size=8, requests=12,
 
 
 def _build_fleet(model, params, *, replicas, slots, max_len, page_size,
-                 num_pages, policy, seed, step_cache, profile):
+                 num_pages, policy, seed, step_cache, profile,
+                 obj_registry=None, content_dedup=False):
     if num_pages is None:
         # the engine's own default (slots x max pages) leaves zero
         # headroom for prefix pins: every admission would immediately
@@ -64,22 +67,37 @@ def _build_fleet(model, params, *, replicas, slots, max_len, page_size,
         det = ServingDetectors(ProfilerConfig(enabled=True, seed=seed + i)) \
             if profile else None
         dets.append(det)
+        if obj_registry is not None:
+            # one logical weight copy per replica: exactly the layout a
+            # multi-host fleet materializes, and what the replica
+            # detector reports as dedupable cross-replica params
+            register_tree(obj_registry, f"replica{i}/params", params)
         engines.append(ServeEngine(
             model, params, num_slots=slots, max_len=max_len,
             kv_layout="paged", page_size=page_size, num_pages=num_pages,
-            detectors=det, step_cache=step_cache))
-    return FleetRouter(engines, policy=policy, seed=seed), dets
+            detectors=det, step_cache=step_cache,
+            registry=obj_registry, owner=f"replica{i}",
+            content_dedup=content_dedup))
+    return FleetRouter(engines, policy=policy, seed=seed,
+                       content_dedup=content_dedup), dets
 
 
 def _run_policy(model, params, trace, *, policy, replicas, slots, max_len,
-                page_size, num_pages, seed, step_cache, profile=False):
-    """Warmup pass + measured pass on fresh fleets (shared compiles)."""
+                page_size, num_pages, seed, step_cache, profile=False,
+                obj_registry=None, content_dedup=False):
+    """Warmup pass + measured pass on fresh fleets (shared compiles).
+
+    The object registry only attaches to the MEASURED fleet: a warmup
+    fleet's prefix-index pins outlive its run, and its registered pages
+    would pollute the replica scan with a dead fleet's objects."""
     for measured in (False, True):
         fleet, dets = _build_fleet(
             model, params, replicas=replicas, slots=slots, max_len=max_len,
             page_size=page_size, num_pages=num_pages, policy=policy,
             seed=seed, step_cache=step_cache,
-            profile=profile and measured)
+            profile=profile and measured,
+            obj_registry=obj_registry if measured else None,
+            content_dedup=content_dedup)
         fleet.submit_trace(trace)
         fleet.run()
         fleet.check()
@@ -136,7 +154,8 @@ def run(arch: str, *, smoke: bool = True, replicas: int = DEF["replicas"],
         trace_in: str = None, trace_out: str = None,
         compare: bool = False, check_single: bool = False,
         profile: bool = False, profile_out: str = None,
-        sarif_out: str = None):
+        sarif_out: str = None, objects: bool = False,
+        dedup: bool = False):
     cfg = registry.get_config(arch)
     if smoke:
         cfg = cfg.smoke()
@@ -164,11 +183,29 @@ def run(arch: str, *, smoke: bool = True, replicas: int = DEF["replicas"],
               page_size=page_size, num_pages=num_pages, seed=seed,
               step_cache=step_cache)
 
+    obj_registry = ObjectRegistry() if objects else None
     fleet, dets = _run_policy(model, params, trace, policy=policy,
-                              profile=profile, **kw)
+                              profile=profile, obj_registry=obj_registry,
+                              content_dedup=dedup, **kw)
     print(f"[fleet] {arch}: {len(trace)} requests over {replicas} "
-          f"replicas x {slots} slots [policy={policy}]")
+          f"replicas x {slots} slots [policy={policy}]"
+          + (" [content-dedup]" if dedup else ""))
     lat = _print_summary(policy, fleet)
+
+    scan = None
+    if objects:
+        scan = ReplicaDetector(obj_registry).scan()
+        dup_bytes = sum(f.bytes for f in scan.findings)
+        kv_x = cross_replica_bytes(scan, "replica_kv_page")
+        deferrals = sum(e.stats["dedup_deferred"] for e in fleet.engines)
+        print(f"[fleet] object registry: {len(obj_registry)} live objects"
+              f" ({obj_registry.nbytes_live():.0f} bytes)")
+        print(f"[fleet] replica findings: {len(scan.findings)} groups, "
+              f"{dup_bytes:.0f} duplicate bytes | cross-replica kv "
+              f"replica bytes: {kv_x:.0f}")
+        print(f"[fleet] dedup deferrals: {deferrals} | content-dedup "
+              f"routes: {fleet.stats['content_dedup_routes']}")
+        print(scan.render(top_k=5, by="object"))
 
     if compare:
         other = "random" if policy != "random" else "prefix"
@@ -198,6 +235,8 @@ def run(arch: str, *, smoke: bool = True, replicas: int = DEF["replicas"],
         members = {f"replica{i}": d.combined()
                    for i, d in enumerate(dets) if d is not None}
         members["router"] = fleet.profile
+        if scan is not None:
+            members["objects"] = scan
         merged = merge_fleet(members)
         print(merged.render(top_k=3))
         if profile_out:
@@ -247,6 +286,12 @@ def main():
     ap.add_argument("--profile", action="store_true")
     ap.add_argument("--profile-out", default=None)
     ap.add_argument("--sarif-out", default=None)
+    ap.add_argument("--objects", action="store_true",
+                    help="attach the object registry and run the "
+                         "OJXPerf replica scan after the trace drains")
+    ap.add_argument("--dedup", action="store_true",
+                    help="content-addressed dedup of same-burst "
+                         "duplicate prefixes (router + engine)")
     a = ap.parse_args()
     run(a.arch, smoke=a.smoke, replicas=a.replicas, slots=a.slots,
         policy=a.policy, page_size=a.page_size, num_pages=a.num_pages,
@@ -256,7 +301,8 @@ def main():
         burst_gap=a.burst_gap, seed=a.seed, trace_in=a.trace_in,
         trace_out=a.trace_out, compare=a.compare,
         check_single=a.check_single, profile=a.profile,
-        profile_out=a.profile_out, sarif_out=a.sarif_out)
+        profile_out=a.profile_out, sarif_out=a.sarif_out,
+        objects=a.objects, dedup=a.dedup)
 
 
 if __name__ == "__main__":

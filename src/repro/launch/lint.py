@@ -104,19 +104,23 @@ def lint_config(arch: str, *, smoke: bool = True, batch: int = 2,
         note(f"train_step: {len(profiles[-1].findings)} findings")
 
     params = model.abstract_params()
+    # decode subjects get the decode-path param view: encoder/cross-KV
+    # leaves only feed init_cache, and as decode invars they'd lint as
+    # dead_param (they ARE dead there — the fix is to not pass them)
+    dparams = model.decode_params(params)
     engine = cfg.family in ENGINE_FAMILIES
 
     if "decode" in subjects:
         cache = _abstract_cache(model, params, batch, max_len)
         if engine:
             tick = make_engine_tick(model)
-            prof = lint_fn(tick, params, cache,
+            prof = lint_fn(tick, dparams, cache,
                            _sds((batch, 1), jnp.int32),
                            _sds((batch,), jnp.bool_),
                            subject=f"{arch}:engine_tick")
         else:
             step = make_serve_step(model)
-            prof = lint_fn(step, params, cache,
+            prof = lint_fn(step, dparams, cache,
                            _sds((batch, 1), jnp.int32),
                            subject=f"{arch}:decode_step")
         profiles.append(prof)
@@ -127,7 +131,7 @@ def lint_config(arch: str, *, smoke: bool = True, batch: int = 2,
         cache = _abstract_cache(model, params, batch, max_len)
         if engine:
             pf = make_engine_prefill(model)
-            prof = lint_fn(pf, params, cache,
+            prof = lint_fn(pf, dparams, cache,
                            _sds((batch, P), jnp.int32),
                            _sds((batch,), jnp.bool_),
                            _sds((batch,), jnp.int32),
@@ -136,7 +140,7 @@ def lint_config(arch: str, *, smoke: bool = True, batch: int = 2,
                            subject=f"{arch}:engine_prefill")
         else:
             fn = lambda p, c, t: model.prefill(p, c, t)
-            prof = lint_fn(fn, params, cache, _sds((batch, P), jnp.int32),
+            prof = lint_fn(fn, dparams, cache, _sds((batch, P), jnp.int32),
                            subject=f"{arch}:prefill")
         profiles.append(prof)
         note(f"prefill: {len(prof.findings)} findings")

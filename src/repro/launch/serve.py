@@ -73,16 +73,17 @@ def padding_waste_profile(stats) -> WasteProfile:
 
 def _run_engine(cfg, model, params, prompts, gen, seed, profile,
                 kv="dense", page_size=16, spec=False, spec_k=4,
-                draft="ngram", spec_rollback=True):
+                draft="ngram", spec_rollback=True, obj_registry=None):
     batch, prompt_len = prompts.shape
     max_len = prompt_len + gen + 1
 
-    def build_and_run(drafter, det):
+    def build_and_run(drafter, det, reg=None):
         eng = ServeEngine(model, params, num_slots=batch, max_len=max_len,
                           detectors=det, kv_dtype=jnp.float32,
                           kv_layout=kv, page_size=page_size,
                           drafter=drafter, spec_k=spec_k,
-                          spec_rollback=spec_rollback)
+                          spec_rollback=spec_rollback,
+                          registry=reg, owner="serve")
         for b in range(batch):
             eng.submit(Request(rid=f"r{b}", tokens=np.asarray(prompts[b]),
                                max_new_tokens=gen))
@@ -108,7 +109,9 @@ def _run_engine(cfg, model, params, prompts, gen, seed, profile,
             drafter = make_drafter(draft, model=model, params=params)
     det = ServingDetectors(ProfilerConfig(enabled=True, seed=seed)) \
         if profile else None
-    eng, out = build_and_run(drafter, det)
+    # only the measured engine registers objects: the oracle's plain
+    # pre-pass would otherwise leave a dead engine's pages in the scan
+    eng, out = build_and_run(drafter, det, obj_registry)
     if plain_out is not None:
         assert np.array_equal(out, plain_out), \
             "speculative outputs diverged from plain greedy decode"
@@ -124,6 +127,10 @@ def _run_legacy(cfg, model, params, prompts, gen, kw):
     max_len = prompt_len + gen + 1
     cache = model.init_cache(params, batch, max_len,
                              kv_dtype=jnp.float32, **kw)
+    # init_cache needs the full tree (cross-KV precompute); the decode
+    # loop gets the decode-path view so the jitted step carries no dead
+    # encoder/cross-KV invars (tier-0 dead_param, whisper/vision)
+    params = model.decode_params(params)
     serve_step = jax.jit(make_serve_step(model), donate_argnums=(1,))
 
     t0 = time.perf_counter()
@@ -153,12 +160,17 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
         sarif_out: str = None,
         kv: str = "dense", page_size: int = 16,
         spec: bool = False, spec_k: int = 4, draft: str = "ngram",
-        spec_rollback: bool = True):
+        spec_rollback: bool = True, objects: bool = False):
     cfg = registry.get_config(arch)
     if smoke:
         cfg = cfg.smoke()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
+    obj_registry = None
+    if objects:
+        from repro.core.objects import ObjectRegistry, register_tree
+        obj_registry = ObjectRegistry()
+        register_tree(obj_registry, "serve/params", params)
 
     data = batch_at(cfg, batch, prompt_len, seed=seed, step=0)
     prompts = jnp.asarray(data["tokens"])
@@ -174,7 +186,8 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
         out, tp, tier3, tier2_subject, stats = _run_engine(
             cfg, model, params, prompts, gen, seed, profile,
             kv=kv, page_size=page_size, spec=spec, spec_k=spec_k,
-            draft=draft, spec_rollback=spec_rollback)
+            draft=draft, spec_rollback=spec_rollback,
+            obj_registry=obj_registry)
     else:
         if kv != "dense":
             raise ValueError(f"--kv paged needs the engine families "
@@ -209,6 +222,16 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
               f"{stats['spec_ticks']} verify ticks")
     print("[serve] sample continuation:", np.asarray(out[0])[:12])
 
+    obj_scan = None
+    if obj_registry is not None:
+        from repro.core.replicas import ReplicaDetector
+        obj_scan = ReplicaDetector(obj_registry).scan()
+        print(f"[serve] object scan: {len(obj_registry)} live objects, "
+              f"{len(obj_scan.findings)} replica groups, "
+              f"{sum(f.bytes for f in obj_scan.findings):.0f} "
+              f"duplicate bytes")
+        print(obj_scan.render(top_k=5, by="object"))
+
     if profile:
         # one merged WasteProfile for the serving path (DESIGN.md §2):
         # Tier-3 serve detectors on the live engine, Tier-2 on the
@@ -218,13 +241,16 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
         pc = ProfilerConfig(enabled=True, period=5000, seed=seed)
         cache1 = model.init_cache(params, batch, prompt_len + gen + 1,
                                   kv_dtype=jnp.float32, **kw)
+        dparams = model.decode_params(params)
         tok1 = out[:, -1:]
         tier1 = profile_fn(
-            lambda tok: make_serve_step(model)(params, cache1, tok)[0],
+            lambda tok: make_serve_step(model)(dparams, cache1, tok)[0],
             tok1, cfg=pc, epochs=2)
         profs = [tier1, tier2] + ([tier3] if tier3 is not None else [])
         if stats is not None:
             profs.append(padding_waste_profile(stats))
+        if obj_scan is not None:
+            profs.append(obj_scan)
         merged = merge_profiles(profs)
         print(merged.render(top_k=3))
         if profile_out:
@@ -265,13 +291,16 @@ def main():
     ap.add_argument("--profile-out", default=None)
     ap.add_argument("--sarif-out", default=None,
                     help="write the merged waste profile as SARIF 2.1.0")
+    ap.add_argument("--objects", action="store_true",
+                    help="register params + KV pages in the object "
+                         "registry and run the replica scan")
     a = ap.parse_args()
     run(a.arch, smoke=a.smoke, batch=a.batch, prompt_len=a.prompt_len,
         gen=a.gen, profile=a.profile, profile_out=a.profile_out,
         sarif_out=a.sarif_out,
         kv=a.kv, page_size=a.page_size, spec=a.spec == "on",
         spec_k=a.spec_k, draft=a.draft,
-        spec_rollback=a.spec_rollback == "on")
+        spec_rollback=a.spec_rollback == "on", objects=a.objects)
 
 
 if __name__ == "__main__":

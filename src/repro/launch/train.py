@@ -24,6 +24,8 @@ from repro.configs.base import ProfilerConfig, TrainConfig
 from repro.core.detectors import TrainingDetectors
 from repro.core.findings import merge_profiles
 from repro.core.hlo_waste import analyze_waste
+from repro.core.objects import ObjectRegistry
+from repro.core.replicas import ReplicaDetector
 from repro.core.report import dump_json
 from repro.core.sarif import write_sarif
 from repro.data.pipeline import Prefetcher
@@ -42,7 +44,8 @@ def run(arch: str, *, smoke: bool = True, steps: int = 50, batch: int = 8,
         waste_report: bool = False, resume: bool = False,
         microbatches: int = 1, remat: str = "none", seed: int = 0,
         log_every: int = 10, strategy: str = None, total_steps: int = None,
-        profile_out: str = None, sarif_out: str = None):
+        profile_out: str = None, sarif_out: str = None,
+        objects: bool = False):
     cfg = registry.get_config(arch)
     if smoke:
         cfg = cfg.smoke()
@@ -66,7 +69,19 @@ def run(arch: str, *, smoke: bool = True, steps: int = 50, batch: int = 8,
     donate = () if profile else (0,)
     jit_step = jax.jit(step_fn, donate_argnums=donate)
 
-    state = TS.create(model, jax.random.PRNGKey(seed))
+    obj_registry = ObjectRegistry() if objects else None
+    state = TS.create(model, jax.random.PRNGKey(seed),
+                      registry=obj_registry)
+    obj_scan = None
+    if obj_registry is not None:
+        # scan AT INIT: the moments are all bit-identical zeros here —
+        # the replica_opt_state lazy-materialize finding in its purest
+        # form (post-training they diverge and the story is gone)
+        obj_scan = ReplicaDetector(obj_registry).scan()
+        print(f"[train] object scan: {len(obj_registry)} live objects, "
+              f"{len(obj_scan.findings)} replica groups, "
+              f"{sum(f.bytes for f in obj_scan.findings):.0f} "
+              f"duplicate bytes")
     start_step = 0
     ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
     if ckpt and resume and ckpt.latest_step() is not None:
@@ -121,7 +136,7 @@ def run(arch: str, *, smoke: bool = True, steps: int = 50, batch: int = 8,
     # one merged WasteProfile across tiers (DESIGN.md §2): Tier-3 step
     # findings + Tier-2 compiled-step findings coalesce into one report
     parts = [p for p in (detectors.report if detectors else None,
-                         tier2_profile) if p is not None]
+                         tier2_profile, obj_scan) if p is not None]
     profile_merged = merge_profiles(parts) if parts else None
     if profile_merged is not None:
         print(profile_merged.render(top_k=5))
@@ -147,6 +162,9 @@ def main():
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--profile", action="store_true")
     ap.add_argument("--waste-report", action="store_true")
+    ap.add_argument("--objects", action="store_true",
+                    help="register params/opt state in the object "
+                         "registry and run the replica scan at init")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--remat", default="none")
     ap.add_argument("--seed", type=int, default=0)
@@ -159,7 +177,8 @@ def main():
         lr=a.lr, ckpt_dir=a.ckpt_dir, ckpt_every=a.ckpt_every,
         profile=a.profile, waste_report=a.waste_report, resume=a.resume,
         microbatches=a.microbatches, remat=a.remat, seed=a.seed,
-        profile_out=a.profile_out, sarif_out=a.sarif_out)
+        profile_out=a.profile_out, sarif_out=a.sarif_out,
+        objects=a.objects)
 
 
 if __name__ == "__main__":

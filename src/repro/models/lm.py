@@ -211,6 +211,35 @@ class LM:
     def param_axes(self) -> Any:
         return P.axes_tree(self.decl())
 
+    def decode_params(self, params) -> Any:
+        """The decode-path view of ``params``.
+
+        The encoder tower and the cross-attention K/V projections (and
+        their k_norm) only feed ``init_cache``'s cross-KV precompute;
+        ``decode_step``/``prefill``/``verify`` read the cached ``xk``/
+        ``xv`` instead. Handing the full tree to a traced decode step
+        leaves those leaves as dead jaxpr invars (tier-0 dead_param) and
+        ships dead bytes to the device on a real serving host. Families
+        without cross-attention get ``params`` back unchanged.
+        """
+        sch = self.sched
+        xattn_blocks = [f"b{i}_{t}" for i, t in enumerate(sch.pattern)
+                        if t in ("xattn", "encdec")]
+        if not xattn_blocks and not sch.has_encoder:
+            return params
+        out = dict(params)
+        if sch.has_encoder:
+            out.pop("enc", None)
+        if xattn_blocks:
+            main = dict(out["main"])
+            for name in xattn_blocks:
+                blk = dict(main[name])
+                blk["xattn"] = {k: v for k, v in blk["xattn"].items()
+                                if k not in ("wk", "wv", "k_norm")}
+                main[name] = blk
+            out["main"] = main
+        return out
+
     # ----------------------------- encoder ---------------------------
     def encode(self, params, frames: jax.Array) -> jax.Array:
         """audio/whisper encoder over stubbed frame embeddings (B,F,d)."""

@@ -62,12 +62,22 @@ def _leaf_init(key, decl: ParamDecl, dtype) -> jax.Array:
     return (jax.random.normal(key, decl.shape, jnp.float32) * std).astype(dtype)
 
 
-def init_tree(key: jax.Array, decls: Any, dtype=jnp.float32) -> Any:
-    """Materialize a declaration tree into a parameter pytree."""
+def init_tree(key: jax.Array, decls: Any, dtype=jnp.float32,
+              registry=None, owner: str = "params") -> Any:
+    """Materialize a declaration tree into a parameter pytree.
+
+    With an `ObjectRegistry` (core/objects.py) every leaf registers as a
+    live ``param`` object under ``owner/<path>`` — THIS call is the
+    allocation site the object tier reports, so replica findings on
+    duplicated weights point here."""
     leaves, treedef = jax.tree_util.tree_flatten(decls, is_leaf=is_decl)
     keys = jax.random.split(key, len(leaves))
     vals = [_leaf_init(k, d, dtype) for k, d in zip(keys, leaves)]
-    return jax.tree_util.tree_unflatten(treedef, vals)
+    tree = jax.tree_util.tree_unflatten(treedef, vals)
+    if registry is not None:
+        from repro.core.objects import register_tree
+        register_tree(registry, owner, tree, kind="param")
+    return tree
 
 
 def abstract_tree(decls: Any, dtype=jnp.float32) -> Any:

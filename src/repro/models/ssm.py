@@ -51,7 +51,10 @@ def _segsum(x: jax.Array) -> jax.Array:
     T = x.shape[-1]
     c = jnp.cumsum(x, axis=-1)
     seg = c[..., :, None] - c[..., None, :]
-    mask = jnp.tril(jnp.ones((T, T), bool))
+    # iota comparison, not jnp.tril(ones): tril's diagonal shift lowers
+    # as `iota + 0`, an identity add per mask element (tier-0
+    # silent_store, ssm.py)
+    mask = jnp.arange(T)[:, None] >= jnp.arange(T)[None, :]
     return jnp.where(mask, seg, -jnp.inf)
 
 
@@ -155,7 +158,12 @@ def apply_mamba(p, cfg: ModelConfig, x: jax.Array, *,
     conv_out = jax.nn.silu(conv_out)
     xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
 
-    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    # softplus as max(x,0)+log1p(exp(-|x|)), not jax.nn.softplus: that
+    # routes through logaddexp(x, 0), whose lowering carries an identity
+    # add and sub against literal 0 over the full dt tensor (tier-0
+    # silent_store, ssm.py). Same stabilized value.
+    dt = dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    dt = jnp.maximum(dt, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(dt)))
     A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (H,) negative
     xh = xs.reshape(B_, S, H, Pd)
     xh = shard(xh, "bshp")
@@ -180,9 +188,10 @@ def apply_mamba(p, cfg: ModelConfig, x: jax.Array, *,
         hs = state["ssm"].astype(jnp.float32)                 # (B,H,N,P)
         ys = []
         for t in range(S):                                    # S==1 for decode
-            dA = jnp.exp(dt[:, t] * A)                        # (B,H)
+            dt_t = dt[:, t]       # slice once: dt feeds both dA and upd
+            dA = jnp.exp(dt_t * A)                            # (B,H)
             upd = jnp.einsum("bn,bh,bhp->bhnp", Bm[:, t].astype(jnp.float32),
-                             dt[:, t], xh[:, t].astype(jnp.float32))
+                             dt_t, xh[:, t].astype(jnp.float32))
             hs = hs * dA[..., None, None] + upd
             ys.append(jnp.einsum("bn,bhnp->bhp", Cm[:, t].astype(jnp.float32), hs))
         y = jnp.stack(ys, axis=1)                             # (B,S,H,P)

@@ -22,6 +22,17 @@ from repro.models.layers import apply_rmsnorm
 from repro.sharding.ctx import shard
 
 
+def _log_sigmoid(x: jax.Array) -> jax.Array:
+    """log sigmoid(x) = min(x, 0) - log1p(exp(-|x|)).
+
+    Not jax.nn.log_sigmoid: that routes through logaddexp(x, 0), whose
+    lowering carries an identity add and sub against literal 0 over the
+    full gate tensor (tier-0 silent_store, xlstm.py). Same stabilized
+    value, no literal-zero ops.
+    """
+    return jnp.minimum(x, 0.0) - jnp.log1p(jnp.exp(-jnp.abs(x)))
+
+
 # ======================================================================
 # mLSTM
 # ======================================================================
@@ -80,7 +91,10 @@ def _mlstm_chunked_impl(q, k, v, logf, logi, chunk: int):
     # intra-chunk log weights: W[z,l] = F_z - F_l + i_l  (z >= l)
     Wlog = (F[:, :, :, None] - F[:, :, None, :] +
             li[:, :, None, :])                                # (B,nc,Q,Q,H) z,l
-    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # iota comparison, not jnp.tril(ones): tril's diagonal shift lowers
+    # as `iota + 0`, an identity add per mask element (tier-0
+    # silent_store, xlstm.py)
+    tri = jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :]
     Wlog = jnp.where(tri[None, None, :, :, None], Wlog, -jnp.inf)
 
     # inter-chunk: contribution of state entering the chunk decays by F_z
@@ -157,7 +171,7 @@ def apply_mlstm(p, cfg: ModelConfig, x: jax.Array, *,
     k = jnp.einsum("bshd,hde->bshe", xh, p["wk"].astype(dt)).astype(f32)
     v = jnp.einsum("bshd,hde->bshe", xh, p["wv"].astype(dt)).astype(f32)
     logi = (xi.astype(f32) @ p["w_i"].astype(f32) + p["b_i"].astype(f32))
-    logf = jax.nn.log_sigmoid(
+    logf = _log_sigmoid(
         xi.astype(f32) @ p["w_f"].astype(f32) + p["b_f"].astype(f32))
 
     if state is None:
@@ -241,7 +255,7 @@ def _slstm_cell(p, cfg, xt, carry):
     z = jnp.tanh(xt["z"] + rmix(p["r_z"].astype(jnp.float32)))
     o = jax.nn.sigmoid(xt["o"] + rmix(p["r_o"].astype(jnp.float32)))
     logi = xt["i"] + rmix(p["r_i"].astype(jnp.float32))
-    logf = jax.nn.log_sigmoid(xt["f"] + rmix(p["r_f"].astype(jnp.float32)))
+    logf = _log_sigmoid(xt["f"] + rmix(p["r_f"].astype(jnp.float32)))
 
     m_new = jnp.maximum(logf + m_prev, logi)
     ig = jnp.exp(logi - m_new)

@@ -57,7 +57,8 @@ import numpy as np
 from repro.core.detectors import ServingDetectors, SlotWrite, VerifyWrite
 from repro.serve.decode import (make_engine_prefill, make_engine_tick,
                                 make_engine_verify)
-from repro.serve.kv_cache import PagedKV, PoolExhausted, make_page_copy
+from repro.serve.kv_cache import (PagedKV, PoolExhausted, _digest,
+                                  make_page_copy)
 
 ENGINE_FAMILIES = ("dense", "moe")
 KV_LAYOUTS = ("dense", "paged")
@@ -127,7 +128,9 @@ class ServeEngine:
                  drafter=None, spec_k: int = 4,
                  spec_rollback: bool = True,
                  kernel_counters: bool = False,
-                 step_cache=None):
+                 step_cache=None,
+                 registry=None, owner: str = "engine",
+                 content_dedup: bool = False):
         if model.cfg.family not in ENGINE_FAMILIES:
             raise ValueError(
                 f"ServeEngine needs an indexed KV cache in every block; "
@@ -159,17 +162,39 @@ class ServeEngine:
         if kernel_counters and not self.paged:
             raise ValueError("kernel_counters needs kv_layout='paged'")
         self.kernel_counters = bool(kernel_counters)
+        # object tier (DESIGN.md § Object tier): every allocated page
+        # registers as a live kv_page object under this engine's owner
+        # name, so the fleet's ReplicaDetector can content-hash pools
+        # across replicas
+        self.registry = registry
+        self.owner = owner
+        # same-burst content dedup: an admission group member whose
+        # page-aligned prefix duplicates an earlier member's is deferred
+        # one tick, so the leader's register_prefix turns the duplicate
+        # into an ordinary PrefixIndex hit (see _admit)
+        self.content_dedup = bool(content_dedup) and self.paged
 
         if self.paged:
             max_pages = -(-max_len // page_size)
             if num_pages is None:
                 num_pages = num_slots * max_pages
             self.kv = PagedKV(num_slots, page_size, num_pages, max_pages,
-                              prefix_window=prefix_window)
+                              prefix_window=prefix_window,
+                              registry=registry, owner=f"{owner}/kv")
             cache = model.init_paged_cache(
                 params, num_slots, max_len, page_size=page_size,
                 num_pages=num_pages, kv_dtype=kv_dtype,
                 kernel_counters=self.kernel_counters)
+            if registry is not None:
+                # the allocator registers pages; it needs the pool's
+                # per-page byte size and a live-content reader, both
+                # only known once the device cache exists
+                a = self.kv.alloc
+                a.page_bytes = sum(
+                    (sub[key].nbytes // num_pages)
+                    for sub in cache["main"].values() if "pt" in sub
+                    for key in ("k", "v"))
+                a.page_reader = self._read_page
             self._copy_fn = (step_cache.get("page_copy")
                              if step_cache is not None
                              else jax.jit(make_page_copy()))
@@ -180,6 +205,14 @@ class ServeEngine:
         self.cache = model.with_cache_index(
             cache, jnp.zeros((num_slots,), jnp.int32))
         self.tokens = jnp.zeros((num_slots, 1), jnp.int32)
+        if self.spec and registry is not None:
+            # the drafter's corpus is the engine's long-lived draft
+            # window: replicas that served the same traffic hold
+            # bit-identical copies (replica_draft_window)
+            registry.register(
+                f"{owner}/draft/window", "draft_window",
+                num_slots * (self.spec_k + 1) * 4,
+                reader=self._read_draft_window)
 
         self.slots: List[Optional[Request]] = [None] * num_slots
         self._lengths = np.zeros(num_slots, np.int64)  # host mirror of idx
@@ -202,6 +235,10 @@ class ServeEngine:
              # preemption signal: it frees global-prefix pins and the
              # deferred request retries next tick)
              "admit_deferred": 0,
+             # admissions pushed back ONE tick by content dedup so a
+             # same-burst duplicate prefix admits as an index hit
+             # instead of being recomputed into replica pages
+             "dedup_deferred": 0,
              # speculative decode accounting
              "spec_ticks": 0, "draft_proposed": 0,
              "draft_accepted": 0, "draft_s": 0.0,
@@ -257,6 +294,28 @@ class ServeEngine:
 
     def _peek(self, layer: int, page: int, off: int) -> np.ndarray:
         return np.asarray(self._peek_fn(self.cache, layer, page, off))
+
+    # --------------------------- object tier ---------------------------
+    def _read_page(self, p: int) -> np.ndarray:
+        """Live contents of pool page `p` across every paged KV
+        sub-block, flat uint8 — the replica detector's content reader
+        (reads self.cache at call time, so it tracks the functional
+        cache updates)."""
+        chunks = []
+        for sub in self.cache["main"].values():
+            if "pt" not in sub:
+                continue
+            for key in ("k", "v"):
+                a = np.ascontiguousarray(np.asarray(sub[key][:, p]))
+                chunks.append(np.frombuffer(a.tobytes(), np.uint8))
+        return (np.concatenate(chunks) if chunks
+                else np.zeros(0, np.uint8))
+
+    def _read_draft_window(self) -> np.ndarray:
+        corpus = (getattr(self.drafter, "_corpus", None)
+                  or getattr(self.drafter, "_seqs", None) or [])
+        arrs = [np.asarray(a, np.int32).ravel() for a in corpus]
+        return (np.concatenate(arrs) if arrs else np.zeros(0, np.int32))
 
     def _read_kernel_counts(self):
         """The last jitted forward's in-kernel [stored, silent, dropped]
@@ -332,12 +391,52 @@ class ServeEngine:
             if self.detectors is not None:
                 self.detectors.on_finish(self.step_no, slot, req.rid)
 
+    def _dedup_group(self, group: List[Request]) -> List[Request]:
+        """Content-addressed same-burst dedup (OJXPerf replica fix).
+
+        Requests admitted in ONE group share a single prefill and only
+        register their prefixes AFTER it, so two same-tick arrivals with
+        a common prompt prefix each compute it into their own pages —
+        the bit-identical kv_page replicas the detector flags even
+        though the PrefixIndex "works". Defer every member whose
+        page-aligned prefix digest duplicates an earlier member's beyond
+        what the index (or a fleet lease) already covers: next tick the
+        leader's register_prefix has landed and the duplicate admits as
+        an ordinary prefix hit sharing the leader's pages. Outputs stay
+        bit-identical — the follower merely starts one tick later."""
+        ps = self.kv.page_size
+        keep: List[Request] = []
+        deferred: List[Request] = []
+        seen: Dict[str, int] = {}      # page-aligned prefix digest key
+        for req in group:
+            toks = np.asarray(req.tokens)
+            keys = [f"{m}:{_digest(toks[:m])}"
+                    for m in range(ps, int(toks.size), ps)]
+            best = max((m for m, k in zip(
+                range(ps, int(toks.size), ps), keys) if k in seen),
+                default=0)
+            have = self.kv.index.match(toks)[0]
+            if req.prefix_hint is not None:
+                have = max(have, int(req.prefix_hint[0]))
+            if best > have:
+                req.arrival = self.step_no + 1
+                deferred.append(req)
+                self.stats["dedup_deferred"] += 1
+            else:
+                keep.append(req)
+                seen.update((k, 1) for k in keys)
+        if deferred:
+            self._queue.extendleft(reversed(deferred))
+        return keep
+
     def _admit(self) -> None:
         free = [b for b, r in enumerate(self.slots) if r is None]
         group: List[Request] = []
         while free[len(group):] and self._queue \
                 and self._queue[0].arrival <= self.step_no:
             group.append(self._queue.popleft())
+        if self.content_dedup and len(group) > 1:
+            group = self._dedup_group(group)
         if not group:
             return
         B = self.num_slots

@@ -59,13 +59,27 @@ class PageAllocator:
     their page table plus prefix-index entries pinning it. `alloc`
     returns pages at refcount 1 (the caller is the first holder);
     sharing bumps it via `incref`; `decref` returns the pages that
-    reached zero (freed back to the list)."""
+    reached zero (freed back to the list).
 
-    def __init__(self, num_pages: int):
+    With an `ObjectRegistry` attached (core/objects.py) every alloc
+    registers the page as a live ``kv_page`` object — provenance is THIS
+    allocator's alloc site, the one frame a developer can act on — and
+    the zero-refcount free retires it, so replica scans only ever see
+    pages some holder still maps. The engine installs `page_bytes` /
+    `page_reader` after it builds the device pool (the allocator cannot
+    size or read pages it does not own)."""
+
+    def __init__(self, num_pages: int, *, registry=None, owner: str = "kv",
+                 page_bytes: int = 0, page_reader=None):
         assert num_pages >= 1
         self.num_pages = num_pages
         self.refcount = np.zeros(num_pages, np.int32)
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.registry = registry
+        self.owner = owner
+        self.page_bytes = page_bytes
+        self.page_reader = page_reader
+        self._oids: Dict[int, int] = {}    # page -> registry oid (live)
 
     @property
     def free_count(self) -> int:
@@ -83,6 +97,13 @@ class PageAllocator:
         for p in out:
             assert self.refcount[p] == 0, f"free page {p} had refs"
             self.refcount[p] = 1
+            if self.registry is not None:
+                rd = self.page_reader
+                rec = self.registry.register(
+                    f"{self.owner}/page{p}", "kv_page", self.page_bytes,
+                    reader=(lambda p=p, rd=rd: rd(p))
+                    if rd is not None else None)
+                self._oids[p] = rec.oid
         return out
 
     def incref(self, pages: Sequence[int]) -> None:
@@ -99,6 +120,10 @@ class PageAllocator:
             if self.refcount[p] == 0:
                 self._free.append(int(p))
                 freed.append(int(p))
+                if self.registry is not None:
+                    oid = self._oids.pop(int(p), None)
+                    if oid is not None:
+                        self.registry.release(oid)
         return freed
 
     def check(self) -> None:
@@ -276,12 +301,14 @@ class PagedKV:
     prefix index that turns duplicated prompts into page mappings."""
 
     def __init__(self, num_slots: int, page_size: int, num_pages: int,
-                 max_pages_per_slot: int, prefix_window: int = 32):
+                 max_pages_per_slot: int, prefix_window: int = 32,
+                 registry=None, owner: str = "kv"):
         self.num_slots = num_slots
         self.page_size = page_size
         self.num_pages = num_pages
         self.max_pages_per_slot = max_pages_per_slot
-        self.alloc = PageAllocator(num_pages)
+        self.alloc = PageAllocator(num_pages, registry=registry,
+                                   owner=owner)
         self.index = PrefixIndex(self.alloc, page_size, prefix_window)
         self.pt = np.full((num_slots, max_pages_per_slot), -1, np.int32)
 

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core.findings import WasteProfile
 from repro.serve.engine import MonotonicStats, Request, ServeEngine
+from repro.serve.kv_cache import _digest
 from repro.serve.global_prefix import GlobalPrefixIndex
 from repro.serve.workload import Trace, TraceRequest
 
@@ -56,7 +57,8 @@ class FleetRouter:
                  policy: str = "prefix", seed: int = 0,
                  min_route_len: int = 8,
                  max_inflight: Optional[int] = None,
-                 global_window: int = 64):
+                 global_window: int = 64,
+                 content_dedup: bool = False):
         assert engines, "a fleet needs at least one replica"
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}")
@@ -88,7 +90,20 @@ class FleetRouter:
             {"dispatched": 0, "prefix_routes": 0,
              "cross_replica_prefix_routes": 0, "fallback_routes": 0,
              "backpressure_ticks": 0, "backpressure_requests": 0,
-             "preemption_evicted_pages": 0, "global_evictions": 0})
+             "preemption_evicted_pages": 0, "global_evictions": 0,
+             "content_dedup_routes": 0})
+        # content-addressed dedup of DISPATCHED-but-unpublished prefixes
+        # (OJXPerf replica fix, fleet side): the global prefix tier only
+        # knows a prefix after its owner admits+publishes, so two
+        # same-burst duplicates route independently and each replica
+        # computes its own bit-identical pages. With `content_dedup` the
+        # router keys every in-flight request's page-aligned prefix
+        # digests to its replica and sends later duplicates THERE, where
+        # the engine's own same-burst defer (engine.content_dedup) turns
+        # them into PrefixIndex hits on the leader's pages.
+        self.content_dedup = bool(content_dedup) and paged
+        self._inflight_digests: Dict[str, Tuple[int, int]] = {}
+        self._rid_digests: Dict[str, List[str]] = {}
         # fleet-level Def.-3 accounting (tier 3: runtime-observed)
         self.profile = WasteProfile(tier=3)
         self.queue_depths: List[List[int]] = [[] for _ in self.engines]
@@ -152,6 +167,14 @@ class FleetRouter:
                     # global tier (the CI fleet-smoke asserts >= 1)
                     self.stats["cross_replica_prefix_routes"] += 1
                 return owner, lease
+        if self.content_dedup:
+            hit = self._dedup_match(treq)
+            if hit is not None and self._has_capacity(hit):
+                # an in-flight request on `hit` shares a page-aligned
+                # prefix: co-locate so the leader's pages get shared
+                # instead of recomputed into cross-replica replicas
+                self.stats["content_dedup_routes"] += 1
+                return hit, None
         if fallback is None:
             return None
         if self.policy == "random":
@@ -160,6 +183,36 @@ class FleetRouter:
             return int(self._rng.choice(avail)), None
         self.stats["fallback_routes"] += self.policy == "prefix"
         return fallback, None
+
+    def _prefix_keys(self, tokens: np.ndarray) -> List[str]:
+        """Page-aligned prefix digest keys of a prompt (same key space
+        the engine's same-burst defer uses)."""
+        ps = self.engines[0].kv.page_size
+        toks = np.asarray(tokens)
+        return [f"{m}:{_digest(toks[:m])}"
+                for m in range(ps, int(toks.size), ps)]
+
+    def _dedup_match(self, treq: TraceRequest) -> Optional[int]:
+        """Replica holding an in-flight request that shares this
+        prompt's longest page-aligned prefix (>= min_route_len)."""
+        best_len, best = 0, None
+        ps = self.engines[0].kv.page_size
+        for m, key in zip(range(ps, int(treq.tokens.size), ps),
+                          self._prefix_keys(treq.tokens)):
+            hit = self._inflight_digests.get(key)
+            if hit is not None and m > best_len:
+                best_len, best = m, hit[0]
+        return best if best_len >= self.min_route_len else None
+
+    def _note_inflight(self, treq: TraceRequest, replica: int) -> None:
+        keys = self._prefix_keys(treq.tokens)
+        self._rid_digests[treq.rid] = keys
+        for key in keys:
+            cur = self._inflight_digests.get(key)
+            # first dispatcher of a prefix stays its owner; later
+            # holders only bump the count that keeps the key alive
+            self._inflight_digests[key] = ((replica, 1) if cur is None
+                                           else (cur[0], cur[1] + 1))
 
     def _dispatch(self) -> None:
         blocked = False
@@ -176,6 +229,8 @@ class FleetRouter:
                 break
             self.backlog.popleft()
             replica, hint = choice
+            if self.content_dedup:
+                self._note_inflight(treq, replica)
             req = Request(rid=treq.rid, tokens=np.asarray(treq.tokens),
                           max_new_tokens=treq.max_new_tokens,
                           arrival=0, prefix_hint=hint)
@@ -207,6 +262,16 @@ class FleetRouter:
         if self.gpi is not None:
             self.gpi.note_admitted(rid)
             self.gpi.publish(met["replica"], req.tokens)
+        # admitted + published: the global tier now covers this prompt's
+        # prefixes, so the in-flight digest window closes
+        for key in self._rid_digests.pop(rid, ()):
+            owner_n = self._inflight_digests.get(key)
+            if owner_n is not None:
+                replica_i, n = owner_n
+                if n <= 1:
+                    del self._inflight_digests[key]
+                else:
+                    self._inflight_digests[key] = (replica_i, n - 1)
         if g <= 0:
             return
         waste = max(0, g - int(req.reuse_len))

@@ -16,10 +16,20 @@ class TrainState(NamedTuple):
     step: jax.Array      # scalar int32
 
 
-def create(model, key, compute_dtype=jnp.bfloat16) -> TrainState:
+def create(model, key, compute_dtype=jnp.bfloat16,
+           registry=None) -> TrainState:
+    """With an object registry (core/objects.py) the compute/master
+    trees register as ``param`` objects here and the moments inside
+    `adamw.init` — so replica findings carry each tree's real
+    allocation site."""
     master = model.init(key, dtype=jnp.float32)
     params = jax.tree_util.tree_map(lambda p: p.astype(compute_dtype), master)
-    return TrainState(params=params, master=master, opt=adamw.init(master),
+    if registry is not None:
+        from repro.core.objects import register_tree
+        register_tree(registry, "train/master", master, kind="param")
+        register_tree(registry, "train/params", params, kind="param")
+    return TrainState(params=params, master=master,
+                      opt=adamw.init(master, registry=registry),
                       step=jnp.zeros((), jnp.int32))
 
 

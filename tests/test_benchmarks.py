@@ -38,6 +38,8 @@ EXPECTED_ROWS = {
     "overhead.fleet_prefix_ttft_p50",
     "overhead.fleet_prefix_ttft_p99",
     "overhead.fleet_prefix_tpot",
+    "overhead.object_decode_step",
+    "overhead.object_replica_scan",
 }
 
 

@@ -202,6 +202,20 @@ def _random_profile(rng) -> WasteProfile:
     if rng.randint(2):
         p.watchpoint_stats["store"] = {"armed": int(rng.randint(10)),
                                        "traps": int(rng.randint(10))}
+    # DJXPerf object table: rows keyed by stable object key; name/site/
+    # kind are functions of the key (like finding meta) so first-wins
+    # cannot leak merge order. NaN nbytes exercises _fmax's NaN rule.
+    okinds = ("kv_page", "param", "opt_state")
+    for _ in range(rng.randint(0, 6)):
+        i = int(rng.randint(4))
+        nbytes = float("nan") if rng.randint(6) == 0 \
+            else float(rng.randint(0, 1 << 16))
+        p.bill_object({"key": f"{okinds[i % 3]}|obj{i}|alloc.py:{10 + i}",
+                       "kind": okinds[i % 3], "name": f"obj{i}",
+                       "site": f"alloc.py:{10 + i}", "nbytes": nbytes},
+                      ("dead", "silent", "replica")[rng.randint(3)],
+                      float(rng.randint(0, 1 << 12)),
+                      count=int(rng.randint(1, 4)))
     return p
 
 
@@ -247,3 +261,33 @@ def test_absorb_nan_fraction_is_order_independent():
     p2.add(f(0.5)); p2.add(f(float("nan")))
     assert p1.to_json() == p2.to_json()
     assert p1.findings[0].fraction == 0.5
+
+
+# ----------------------------------------------------------------------
+# Zero-event profiles: every reporting surface must stay finite
+# ----------------------------------------------------------------------
+def test_zero_event_profile_renders_and_serializes():
+    """A cold profile (no events observed yet — a serve tick before the
+    first admission, a scan of an empty registry) must not divide by
+    zero or print NaN anywhere: fractions(), both render() views, the
+    JSON round-trip."""
+    p = WasteProfile(tier=1)
+    assert all(v == 0.0 for v in p.fractions().values())
+    assert "nan" not in p.render().lower()
+    assert "nan" not in p.render(by="object").lower()
+    assert WasteProfile.from_json(p.to_json()).to_json() == p.to_json()
+    # observed-but-never-flagged: the fraction is an honest 0, not 0/0
+    p.observe("dead_store", False)
+    assert p.fractions()["dead_store"] == 0.0
+    # an object billed with zero/NaN size renders a placeholder instead
+    # of a divide-by-zero percentage
+    p.bill_object({"key": "kv_page|kv/page0|kv_cache.py:102",
+                   "kind": "kv_page", "name": "kv/page0",
+                   "site": "kv_cache.py:102", "nbytes": 0.0},
+                  "replica", 0.0)
+    p.bill_object({"key": "param|p|m.py:1", "kind": "param", "name": "p",
+                   "site": "m.py:1", "nbytes": float("nan")},
+                  "dead", 64.0)
+    out = p.render(by="object")
+    assert "nan" not in out.lower() and "inf" not in out.lower()
+    assert merge(p, WasteProfile(tier=1)).to_json() == p.to_json()

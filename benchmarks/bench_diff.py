@@ -146,7 +146,11 @@ def main(argv=None) -> int:
     if os.path.abspath(base_path) == os.path.abspath(cur_path):
         print("baseline and current are the same file — nothing to diff")
         return 0
-    return diff(load(base_path), load(cur_path), args.band)
+    base, cur = load(base_path), load(cur_path)
+    # say which baseline won (--latest picks silently otherwise)
+    print(f"baseline: {os.path.basename(base_path)} "
+          f"(rev {base.get('rev')}, toy={base.get('toy')})")
+    return diff(base, cur, args.band)
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ info, so successive revisions leave comparable artifacts;
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import subprocess
@@ -132,6 +133,81 @@ def run(toy: bool = False):
     rows.extend(run_kernels(toy))
     rows.extend(run_fleet(toy))
     rows.extend(run_objects(toy))
+    rows.extend(run_matrix(toy))
+    return rows
+
+
+def run_matrix(toy: bool = False):
+    """Zoo-matrix tier: what a matrix train cell costs, and what the
+    top-ranked fix bought.
+
+    ``matrix_*``: per-cell profiled train step (tier-3 detectors, the
+    billing ``launch/matrix.py`` attaches to every train cell) vs the
+    unprofiled jitted step, for two zoo configs the matrix flagged —
+    the per-cell overhead must stay inside the Tier-3 production
+    envelope. ``moe_dispatch_*``: train step under the GShard one-hot
+    einsum dispatch (dead expert rows, the pre-fix baseline) vs the
+    capacity-mask scatter dispatch the matrix ranking landed."""
+    from repro.data.synthetic import batch_at
+    from repro.kernels import ops as _ops
+
+    rows = []
+
+    def mk_step(cfg):
+        model = build_model(cfg)
+        tc = TrainConfig(total_steps=100, warmup_steps=1)
+        step = jax.jit(make_train_step(model, tc))
+        state = TS.create(model, jax.random.PRNGKey(0))
+        b = batch_at(cfg, 2, 32, seed=0, step=0)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        holder = {"state": state}
+
+        def native():
+            s, m = step(holder["state"], batch)
+            jax.block_until_ready(m["loss"])
+            holder["state"] = s
+        return native, holder, b
+
+    nt = 2 if toy else 5
+    for arch, short in (("granite-moe-3b-a800m", "granite_moe"),
+                        ("whisper-large-v3", "whisper")):
+        cfg = registry.get_config(arch).smoke()
+        native, holder, b = mk_step(cfg)
+        t_nat = _time(native, n=nt)
+        rows.append((f"overhead.matrix_{short}_native_step", t_nat * 1e6,
+                     "baseline"))
+        det = TrainingDetectors(ProfilerConfig(enabled=True),
+                                leaves_per_step=4)
+        for leaf in jax.tree_util.tree_leaves(holder["state"].params):
+            _ops.silent_fraction(leaf, leaf, tol=det.tol)  # warm jits
+        stepno = [0]
+
+        def profiled():
+            before = holder["state"].params
+            det.on_batch(stepno[0], b)
+            native()
+            det.on_step(stepno[0], before, holder["state"].params)
+            stepno[0] += 1
+        for _ in range(2):      # populate reservoir
+            profiled()
+        t_prof = _time(profiled, n=nt)
+        rows.append((f"overhead.matrix_{short}_profiled_step",
+                     t_prof * 1e6, f"slowdown={t_prof/t_nat:.3f}x"))
+
+    for arch, short in (("granite-moe-3b-a800m", "granite_moe"),
+                        ("llama4-scout-17b-a16e", "llama4")):
+        base = registry.get_config(arch).smoke()
+        ts = {}
+        for disp in ("einsum", "scatter"):
+            cfg = dataclasses.replace(
+                base, moe=dataclasses.replace(base.moe, dispatch=disp))
+            native, _, _ = mk_step(cfg)
+            ts[disp] = _time(native, n=nt)
+        rows.append((f"overhead.moe_dispatch_einsum_{short}",
+                     ts["einsum"] * 1e6, "baseline (one-hot dispatch)"))
+        rows.append((f"overhead.moe_dispatch_scatter_{short}",
+                     ts["scatter"] * 1e6,
+                     f"speedup={ts['einsum']/ts['scatter']:.2f}x"))
     return rows
 
 

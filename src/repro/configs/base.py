@@ -24,6 +24,13 @@ class MoEConfig:
     router_jitter: float = 0.0
     # Load-balancing auxiliary loss coefficient (Switch/GShard style).
     aux_loss_coef: float = 0.01
+    # "scatter": capacity-mask scatter dispatch (mode=drop) — only routed
+    # rows of the (B,E,C,d) expert buffer are ever written, so the
+    # dead-expert-store fraction is 0 by construction. "einsum": the
+    # GShard one-hot dispatch/combine einsums, kept as the A/B reference
+    # (materializes every buffer row; unrouted rows are Def.-1 dead
+    # stores).
+    dispatch: str = "scatter"
 
 
 @dataclass(frozen=True)

@@ -121,10 +121,78 @@ def _run_engine(cfg, model, params, prompts, gen, seed, profile,
     return jnp.asarray(out), tp, tier3, tier2_subject, eng.stats
 
 
-def _run_legacy(cfg, model, params, prompts, gen, kw):
+def _bucket_pow2(n: int, cap: int, lo: int = 8) -> int:
+    """Smallest power-of-two >= n (engine `_bucket` policy), capped."""
+    b = lo
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+def encoder_padding_profile(stats) -> WasteProfile:
+    """Tier-2 padding-waste finding for encoder-decoder serving: frames
+    padded to the run extent burn encoder prefill compute and cross-KV
+    bytes on garbage rows (checked = all frame rows swept, flagged =
+    the padded ones). Bucketing the extent (``--bucket-frames``) is the
+    fix this finding's bytes measure."""
+    prof = WasteProfile(tier=2)
+    padded = int(stats.get("padded_frames", 0))
+    true = int(stats.get("true_frames", 0))
+    prof.checked["prefill_padding"] = padded + true
+    prof.flagged["prefill_padding"] = padded
+    if padded:
+        prof.add(Finding(
+            kind="prefill_padding", tier=2,
+            c1=("launch.serve:_run_legacy",), c2=("models.lm:encode",),
+            count=1, bytes=float(stats.get("padded_bytes", 0)),
+            fraction=padded / max(padded + true, 1),
+            meta={"padded_frames": padded, "true_frames": true,
+                  "frames_run": int(stats.get("frames_run", 0)),
+                  "frames_capacity": int(stats.get("frames_capacity", 0))}))
+    return prof
+
+
+def _prep_frames(cfg, model, kw, frame_lengths, bucket_frames):
+    """Right-pad audio frames to the run extent and account the padding.
+
+    Baseline: every request runs at the full capacity extent (the
+    frames buffer as generated). Bucketed: the extent shrinks to the
+    power-of-two bucket of the batch's longest true length. Rows past
+    each true length are zeroed and masked (kv_valid through the
+    encoder, xvalid through cross-attention), so greedy outputs are
+    identical in both modes — only the padded bytes differ."""
+    frames = np.asarray(kw["frames"])
+    B, cap = frames.shape[:2]
+    lens = np.minimum(np.asarray(frame_lengths, np.int32), cap)
+    F_run = cap if not bucket_frames \
+        else _bucket_pow2(int(lens.max()), cap)
+    mask = np.arange(cap)[None, :] < lens[:, None]
+    frames = np.where(mask[..., None], frames, 0.0)[:, :F_run]
+    kw = {**kw, "frames": jnp.asarray(frames),
+          "frame_lengths": jnp.asarray(lens)}
+    true = int(lens.sum())
+    padded = B * F_run - true
+    itemsize = 4  # float32 frames and kv_dtype below
+    # a padded frame row costs its embedding row plus the per-layer
+    # cross-K/V rows precomputed from it
+    row = cfg.d_model * itemsize
+    kv_row = model.sched.n_super * 2 * cfg.num_kv_heads * cfg.head_dim \
+        * itemsize
+    stats = {"frames_capacity": cap, "frames_run": F_run,
+             "true_frames": true, "padded_frames": padded,
+             "padded_bytes": padded * (row + kv_row)}
+    return kw, stats
+
+
+def _run_legacy(cfg, model, params, prompts, gen, kw, *,
+                frame_lengths=None, bucket_frames=False):
     """Token-loop driver for families without an indexed KV cache."""
     batch, prompt_len = prompts.shape
     max_len = prompt_len + gen + 1
+    stats = None
+    if cfg.family == "audio" and frame_lengths is not None:
+        kw, stats = _prep_frames(cfg, model, kw, frame_lengths,
+                                 bucket_frames)
     cache = model.init_cache(params, batch, max_len,
                              kv_dtype=jnp.float32, **kw)
     # init_cache needs the full tree (cross-KV precompute); the decode
@@ -151,7 +219,7 @@ def _run_legacy(cfg, model, params, prompts, gen, kw):
     tp = {"prefill_tok_s": batch * prompt_len / max(t_prefill, 1e-9),
           "decode_tok_s": batch * gen / max(t_decode, 1e-9)}
     lowered = serve_step.lower(params, cache, generated[-1])
-    return out, tp, cache, lowered
+    return out, tp, cache, lowered, stats
 
 
 def run(arch: str, *, smoke: bool = True, batch: int = 4,
@@ -160,7 +228,8 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
         sarif_out: str = None,
         kv: str = "dense", page_size: int = 16,
         spec: bool = False, spec_k: int = 4, draft: str = "ngram",
-        spec_rollback: bool = True, objects: bool = False):
+        spec_rollback: bool = True, objects: bool = False,
+        bucket_frames: bool = True):
     cfg = registry.get_config(arch)
     if smoke:
         cfg = cfg.smoke()
@@ -182,6 +251,7 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
 
     tier3 = None
     stats = None
+    enc_stats = None
     if cfg.family in ENGINE_FAMILIES:
         out, tp, tier3, tier2_subject, stats = _run_engine(
             cfg, model, params, prompts, gen, seed, profile,
@@ -195,8 +265,20 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
         if spec:
             raise ValueError(f"--spec needs the engine families "
                              f"{ENGINE_FAMILIES}, not {cfg.family!r}")
-        out, tp, _, tier2_subject = _run_legacy(
-            cfg, model, params, prompts, gen, kw)
+        lens = None
+        if cfg.family == "audio":
+            from repro.data.synthetic import frame_lengths
+            lens = frame_lengths(cfg, batch, seed=seed)
+        out, tp, _, tier2_subject, enc_stats = _run_legacy(
+            cfg, model, params, prompts, gen, kw,
+            frame_lengths=lens, bucket_frames=bucket_frames)
+        if enc_stats is not None:
+            print(f"[serve] encoder frames: extent {enc_stats['frames_run']}"
+                  f"/{enc_stats['frames_capacity']} "
+                  f"({'bucketed' if bucket_frames else 'capacity'}), "
+                  f"{enc_stats['true_frames']} true + "
+                  f"{enc_stats['padded_frames']} padded rows "
+                  f"({enc_stats['padded_bytes']} padded bytes)")
 
     # prompt tokens are NOT generated tokens: report the two rates
     # separately (a single blended tok/s overstates decode by counting
@@ -249,6 +331,8 @@ def run(arch: str, *, smoke: bool = True, batch: int = 4,
         profs = [tier1, tier2] + ([tier3] if tier3 is not None else [])
         if stats is not None:
             profs.append(padding_waste_profile(stats))
+        if enc_stats is not None:
+            profs.append(encoder_padding_profile(enc_stats))
         if obj_scan is not None:
             profs.append(obj_scan)
         merged = merge_profiles(profs)
@@ -294,13 +378,20 @@ def main():
     ap.add_argument("--objects", action="store_true",
                     help="register params + KV pages in the object "
                          "registry and run the replica scan")
+    ap.add_argument("--bucket-frames", default="on", choices=("on", "off"),
+                    help="audio family: run the encoder at the "
+                         "power-of-two bucket of the batch's longest "
+                         "true frame length instead of always padding "
+                         "to cfg.encoder_frames (outputs identical; "
+                         "prefill_padding bytes drop)")
     a = ap.parse_args()
     run(a.arch, smoke=a.smoke, batch=a.batch, prompt_len=a.prompt_len,
         gen=a.gen, profile=a.profile, profile_out=a.profile_out,
         sarif_out=a.sarif_out,
         kv=a.kv, page_size=a.page_size, spec=a.spec == "on",
         spec_k=a.spec_k, draft=a.draft,
-        spec_rollback=a.spec_rollback == "on", objects=a.objects)
+        spec_rollback=a.spec_rollback == "on", objects=a.objects,
+        bucket_frames=a.bucket_frames == "on")
 
 
 if __name__ == "__main__":

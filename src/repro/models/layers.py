@@ -87,11 +87,18 @@ def apply_attention(p, cfg: ModelConfig, x: jax.Array, *,
                     cache: Optional[Dict[str, jax.Array]] = None,
                     use_rope: bool = True,
                     spec: Optional[str] = None,
+                    kv_valid: Optional[jax.Array] = None,
                     ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Self- or cross-attention with optional KV cache.
 
     cache: {"k": (B,Smax,Hkv,D), "v": ..., "idx": scalar int32} — decode
     writes the new K/V at idx and attends over [0, idx+len).
+
+    ``kv_valid``: optional (B, Skv) key-validity mask for the cache-free
+    paths (encoder self-attention over right-padded frames, cross-attn
+    over a padded source): masked keys never contribute, so outputs on
+    valid rows are independent of the padded extent — what makes
+    length-bucketed encoder prefill bit-identical to padded-to-capacity.
 
     ``spec`` marks a speculative width-k verify forward (LM.verify):
       "overwrite" — all S window rows are stored, but bounded: rows past
@@ -134,7 +141,6 @@ def apply_attention(p, cfg: ModelConfig, x: jax.Array, *,
 
     new_cache = None
     kv_len = None
-    kv_valid = None
     if (cache is not None and kv_src is None and "pt" in cache
             and spec == "defer"):
         # speculative verify, rollback mode: the pool is NOT written.
@@ -354,11 +360,12 @@ def decl_dense_block(cfg: ModelConfig) -> Dict[str, Any]:
 
 
 def apply_dense_block(p, cfg: ModelConfig, x, *, causal=True, cache=None,
-                      positions=None, use_rope=True, spec=None):
+                      positions=None, use_rope=True, spec=None,
+                      kv_valid=None):
     h, new_cache = apply_attention(
         p["attn"], cfg, apply_rmsnorm(p["ln1"], x, cfg.norm_eps),
         causal=causal, cache=cache, positions=positions, use_rope=use_rope,
-        spec=spec)
+        spec=spec, kv_valid=kv_valid)
     x = x + h
     x = x + apply_mlp(p["mlp"], cfg, apply_rmsnorm(p["ln2"], x, cfg.norm_eps))
     return x, new_cache

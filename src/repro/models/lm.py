@@ -241,13 +241,27 @@ class LM:
         return out
 
     # ----------------------------- encoder ---------------------------
-    def encode(self, params, frames: jax.Array) -> jax.Array:
-        """audio/whisper encoder over stubbed frame embeddings (B,F,d)."""
+    def encode(self, params, frames: jax.Array,
+               frame_lengths: Optional[jax.Array] = None) -> jax.Array:
+        """audio/whisper encoder over stubbed frame embeddings (B,F,d).
+
+        ``frame_lengths``: optional (B,) true frame counts for
+        right-padded inputs. Padded keys are masked out of every
+        encoder self-attention, so rows below each true length are
+        independent of how far the batch was padded — the invariant
+        that lets serving bucket the encoder extent (launch/serve.py)
+        instead of always padding to cfg.encoder_frames.
+        """
         cfg = self.cfg
         x = frames.astype(jnp.dtype(cfg.dtype))
+        valid = None
+        if frame_lengths is not None:
+            valid = (jnp.arange(x.shape[1])[None, :]
+                     < jnp.asarray(frame_lengths, jnp.int32)[:, None])
 
         def blk(x, p):
-            y, _ = L.apply_dense_block(p, cfg, x, causal=False, use_rope=True)
+            y, _ = L.apply_dense_block(p, cfg, x, causal=False,
+                                       use_rope=True, kv_valid=valid)
             return y, None
         x, _ = jax.lax.scan(blk, x, params["enc"]["blocks"])
         return L.apply_rmsnorm(params["enc"]["norm"], x, cfg.norm_eps)
@@ -360,8 +374,15 @@ class LM:
     def init_cache(self, params, batch: int, max_len: int, *,
                    img: Optional[jax.Array] = None,
                    frames: Optional[jax.Array] = None,
+                   frame_lengths: Optional[jax.Array] = None,
                    kv_dtype=jnp.bfloat16) -> Any:
-        """Preallocate decode caches; precompute cross-attn KV."""
+        """Preallocate decode caches; precompute cross-attn KV.
+
+        ``frame_lengths``: (B,) true frame counts when ``frames`` is
+        right-padded (and possibly bucketed below cfg.encoder_frames).
+        The encoder masks padded keys and the cross-KV cache carries an
+        ``xvalid`` mask so decode cross-attention ignores them too —
+        greedy outputs are then independent of the padded extent."""
         cfg, sch = self.cfg, self.sched
         main = {}
         for i, typ in enumerate(sch.pattern):
@@ -384,15 +405,21 @@ class LM:
             cache = self._fill_cross_kv(params, cache, img.astype(jnp.dtype(cfg.dtype)),
                                         "xattn", "xattn")
         if sch.has_encoder and frames is not None:
-            enc_out = self.encode(params, frames)
-            cache = self._fill_cross_kv(params, cache, enc_out, "encdec", "xattn")
+            enc_out = self.encode(params, frames, frame_lengths)
+            cache = self._fill_cross_kv(params, cache, enc_out, "encdec",
+                                        "xattn", src_lengths=frame_lengths)
         return cache
 
-    def _fill_cross_kv(self, params, cache, src, typ, attn_key):
+    def _fill_cross_kv(self, params, cache, src, typ, attn_key,
+                       src_lengths=None):
         """Compute per-layer cross KV from src for all scanned layers."""
         cfg, sch = self.cfg, self.sched
         Hkv, D = cfg.num_kv_heads, cfg.head_dim
         B, Skv = src.shape[:2]
+        valid = None
+        if src_lengths is not None:
+            valid = (jnp.arange(Skv)[None, :]
+                     < jnp.asarray(src_lengths, jnp.int32)[:, None])
         for i, t in enumerate(sch.pattern):
             if t != typ:
                 continue
@@ -411,6 +438,9 @@ class LM:
             sub = dict(cache["main"][name])
             sub["xk"] = ks.astype(sub["xk"].dtype)
             sub["xv"] = vs.astype(sub["xv"].dtype)
+            if valid is not None:
+                sub["xvalid"] = jnp.broadcast_to(
+                    valid, (self.sched.n_super,) + valid.shape)
             cache["main"][name] = sub
         return cache
 
@@ -681,6 +711,8 @@ class LM:
                     x = x + L.apply_mlp(blk["mlp"], cfg,
                                         L.apply_rmsnorm(blk["ln2"], x, cfg.norm_eps))
                     nc = {**nc, "xk": c["xk"], "xv": c["xv"]}
+                    if "xvalid" in c:
+                        nc["xvalid"] = c["xvalid"]
                 else:
                     raise ValueError(typ)
                 new_c[name] = nc
@@ -724,13 +756,16 @@ class LM:
         from repro.sharding.ctx import current_sharder
         sharder = current_sharder()
         plan = decode_shard_plan(sharder, B, c["xk"].shape[1])
-        if plan is not None:
+        if plan is not None and "xvalid" not in c:
             b_ax, s_ax = plan
             out = cross_attention_sharded(
                 q, c["xk"], c["xv"], mesh=sharder.mesh,
                 batch_axes=b_ax, seq_axes=s_ax)
         else:
+            # length-masked cross-attn (bucketed encoder prefill): keys
+            # past each row's true source length never contribute
             out = L.attention(q, c["xk"].astype(x.dtype),
-                              c["xv"].astype(x.dtype), causal=False)
+                              c["xv"].astype(x.dtype), causal=False,
+                              kv_valid=c.get("xvalid"))
         out = out.reshape(B, S, H * D)
         return out @ p_attn["wo"]["w"].astype(x.dtype)

@@ -1,5 +1,27 @@
-"""Mixture-of-Experts layer: token-choice top-k routing with capacity,
-GShard/Switch-style einsum dispatch (MXU-friendly, GSPMD-shardable).
+"""Mixture-of-Experts layer: token-choice top-k routing with capacity.
+
+Two dispatch paths share one routing front-end (`_route`):
+
+* ``dispatch="scatter"`` (default): capacity-mask scatter with
+  ``mode="drop"``. Only routed rows of the (B, E, C, d) expert buffer
+  are written (dropped tokens target the out-of-bounds slot C and are
+  discarded by the scatter), so the dead-expert-store fraction of the
+  dispatch buffer is 0 by construction, and the O(B·S·E·C·d) one-hot
+  dispatch/combine einsums disappear entirely. Combine is a
+  ``mode="fill"`` gather weighted by the kept gates.
+* ``dispatch="einsum"``: the GShard/Switch one-hot einsum dispatch kept
+  as the A/B reference. It materializes every (e, c) row — rows no
+  token routed to are written as zeros and never read non-trivially:
+  Def.-1 dead stores, which is exactly what the zoo matrix flags
+  (`dispatch_stats` below measures the fraction).
+
+Equivalence (measured, tests/test_moe_dispatch.py): for
+experts_per_token == 1 the forward outputs and expert-weight grads are
+bit-identical in float32 (empty dispatch rows are +0.0 either way and
+single-contributor sums add only exact zeros). For K >= 2 the combine
+contracts over k where the einsum contracts over (e, c), so XLA's
+FMA/lane accumulation order differs and outputs agree to ~1 ulp
+(<= 1e-6 relative in float32) rather than bitwise; grads likewise.
 
 Dispatch is *row-local*: capacity slots are assigned per batch row (cumsum
 over the sequence dim only), so no cross-batch communication is induced by
@@ -52,22 +74,18 @@ def capacity(cfg: ModelConfig, group: int) -> int:
     return max(8, -(-c // 8) * 8)
 
 
-def apply_moe(p, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """x: (B, S, d) -> (out, aux_loss).
+def _route(p, cfg: ModelConfig, x: jax.Array):
+    """Routing front-end shared by both dispatch paths.
 
-    Tokens are regrouped to (n_groups, GROUP, d); capacity is per-group
-    (GShard): routing bookkeeping (cumsum) never crosses a group, so the
-    dispatch tensors stay O(tokens * E * C/GROUP) and shard cleanly.
+    x: (B, S, d) grouped tokens. Returns (gate_idx, gate_keep, pos_in_e,
+    keep, C, aux): expert choice + capacity slot per (row, token, k),
+    the kept (renormalized, capacity-masked) gates, and the Switch
+    load-balance auxiliary loss.
     """
     m = cfg.moe
-    Bo, So, d = x.shape
-    E, K = m.num_experts, m.experts_per_token
-    tokens = Bo * So
-    G = min(GROUP, tokens)
-    x = x.reshape(tokens // G, G, d)
     B, S = x.shape[:2]
-    C = capacity(cfg, G)
-    dt = x.dtype
+    E, K = m.num_experts, m.experts_per_token
+    C = capacity(cfg, S)
 
     logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (B,S,E)
     probs = jax.nn.softmax(logits, axis=-1)
@@ -92,22 +110,71 @@ def apply_moe(p, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     keep = pos_in_e < C                                                  # dropped beyond capacity
 
     gate_keep = gate_vals * keep.astype(jnp.float32)                     # (B,S,K)
-    # dispatch (B,S,E,C) one-hot; combine = dispatch * gate
-    slot_oh = jax.nn.one_hot(jnp.where(keep, pos_in_e, C), C + 1,
-                             dtype=jnp.float32)[..., :C]                 # (B,S,K,C)
-    disp = jnp.einsum("bske,bskc->bsec", onehot.astype(jnp.float32), slot_oh)
-    comb = jnp.einsum("bske,bskc,bsk->bsec", onehot.astype(jnp.float32),
-                      slot_oh, gate_keep)
+    return gate_idx, gate_keep, pos_in_e, keep, C, aux
 
-    xin = jnp.einsum("bsec,bsd->becd", disp.astype(dt), x)               # (B,E,C,d)
-    xin = shard(xin, "becd")
+
+def _expert_ffn(p, xin: jax.Array, dt) -> jax.Array:
+    """(B, E, C, d) -> (B, E, C, d) gated-silu expert FFN."""
     up = jnp.einsum("becd,edf->becf", xin, p["w_up"].astype(dt))
     gt = jnp.einsum("becd,edf->becf", xin, p["w_gate"].astype(dt))
     h = jax.nn.silu(gt) * up
     h = shard(h, "becf")
-    eout = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(dt))       # (B,E,C,d)
-    eout = shard(eout, "becd")
-    out = jnp.einsum("bsec,becd->bsd", comb.astype(dt), eout)            # (B,S,d)
+    eout = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(dt))
+    return shard(eout, "becd")
+
+
+def apply_moe(p, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    Tokens are regrouped to (n_groups, GROUP, d); capacity is per-group
+    (GShard): routing bookkeeping (cumsum) never crosses a group, so the
+    dispatch tensors stay O(tokens * E * C/GROUP) and shard cleanly.
+    """
+    m = cfg.moe
+    Bo, So, d = x.shape
+    E = m.num_experts
+    tokens = Bo * So
+    G = min(GROUP, tokens)
+    x = x.reshape(tokens // G, G, d)
+    B, S = x.shape[:2]
+    dt = x.dtype
+
+    gate_idx, gate_keep, pos_in_e, keep, C, aux = _route(p, cfg, x)
+
+    if m.dispatch == "einsum":
+        # Reference path: one-hot dispatch/combine einsums. Every row of
+        # the (B,E,C,d) buffer is materialized; the unrouted rows are the
+        # dead expert stores the matrix driver flags (dispatch_stats).
+        onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)          # (B,S,K,E)
+        slot_oh = jax.nn.one_hot(jnp.where(keep, pos_in_e, C), C + 1,
+                                 dtype=jnp.float32)[..., :C]             # (B,S,K,C)
+        disp = jnp.einsum("bske,bskc->bsec", onehot, slot_oh)
+        comb = jnp.einsum("bske,bskc,bsk->bsec", onehot, slot_oh, gate_keep)
+
+        xin = jnp.einsum("bsec,bsd->becd", disp.astype(dt), x)           # (B,E,C,d)
+        xin = shard(xin, "becd")
+        eout = _expert_ffn(p, xin, dt)
+        out = jnp.einsum("bsec,becd->bsd", comb.astype(dt), eout)        # (B,S,d)
+    else:
+        # Masked scatter dispatch: routed tokens land in their exact
+        # (expert, slot); dropped tokens target slot C, which is out of
+        # bounds for the C-slot buffer and discarded by mode="drop". The
+        # (b, e, slot<C) triples are unique by construction (top_k experts
+        # are distinct per token, cumsum slots are distinct per expert),
+        # so the scatter is deterministic and writes only routed rows —
+        # no dead expert stores, and no O(S·E·C) dispatch einsum.
+        K = m.experts_per_token
+        slot = jnp.where(keep, pos_in_e, C)                              # (B,S,K)
+        b_idx = jnp.broadcast_to(jnp.arange(B)[:, None, None], (B, S, K))
+        xk = jnp.broadcast_to(x[:, :, None, :], (B, S, K, d))
+        xin = jnp.zeros((B, E, C, d), dt).at[b_idx, gate_idx, slot].set(
+            xk, mode="drop")
+        xin = shard(xin, "becd")
+        eout = _expert_ffn(p, xin, dt)
+        # Combine: gather each token's expert outputs back (dropped slots
+        # read as 0 via mode="fill") and weight by the kept gates.
+        eg = eout.at[b_idx, gate_idx, slot].get(mode="fill", fill_value=0)
+        out = jnp.einsum("bsk,bskd->bsd", gate_keep.astype(dt), eg)      # (B,S,d)
 
     if m.shared_expert:
         sh = p["shared"]
@@ -116,3 +183,39 @@ def apply_moe(p, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
     out = out.reshape(Bo, So, d)
     return shard(out, "btd"), aux.astype(jnp.float32)
+
+
+def dispatch_stats(p, cfg: ModelConfig, x: jax.Array) -> Dict[str, Any]:
+    """Measure the dead-expert-store waste of the dispatch buffer.
+
+    Runs the routing front-end on real activations and counts (expert,
+    slot) rows of the (B, E, C, d) dispatch buffer. Under
+    ``dispatch="einsum"`` every row is stored (the dispatch einsum
+    materializes the full buffer), so unrouted rows are Def.-1 dead
+    stores; under ``dispatch="scatter"`` only routed rows are ever
+    written, so the dead fraction is exactly 0. Returned bytes use the
+    activation dtype's itemsize x d_model per row.
+    """
+    m = cfg.moe
+    Bo, So, d = x.shape
+    tokens = Bo * So
+    G = min(GROUP, tokens)
+    xg = x.reshape(tokens // G, G, d)
+    B, S = xg.shape[:2]
+    _, _, _, keep, C, _ = _route(p, cfg, xg)
+
+    rows_total = B * m.num_experts * C
+    rows_routed = int(jnp.sum(keep.astype(jnp.int32)))
+    row_bytes = d * jnp.dtype(x.dtype).itemsize
+    stored = rows_total if m.dispatch == "einsum" else rows_routed
+    dead = stored - rows_routed
+    return {
+        "dispatch": m.dispatch,
+        "rows_total": rows_total,
+        "rows_routed": rows_routed,
+        "rows_stored": stored,
+        "dead_rows": dead,
+        "dead_bytes": dead * row_bytes,
+        "stored_bytes": stored * row_bytes,
+        "dead_fraction": (dead / stored) if stored else 0.0,
+    }

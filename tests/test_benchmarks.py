@@ -40,6 +40,14 @@ EXPECTED_ROWS = {
     "overhead.fleet_prefix_tpot",
     "overhead.object_decode_step",
     "overhead.object_replica_scan",
+    "overhead.matrix_granite_moe_native_step",
+    "overhead.matrix_granite_moe_profiled_step",
+    "overhead.matrix_whisper_native_step",
+    "overhead.matrix_whisper_profiled_step",
+    "overhead.moe_dispatch_einsum_granite_moe",
+    "overhead.moe_dispatch_scatter_granite_moe",
+    "overhead.moe_dispatch_einsum_llama4",
+    "overhead.moe_dispatch_scatter_llama4",
 }
 
 
@@ -86,6 +94,10 @@ def test_every_overhead_row_runs_at_toy_sizes():
     fl = notes["overhead.fleet_prefix_tpot"]
     assert fl.startswith("waste_bytes=0_vs_random="), fl
     assert not fl.endswith("_vs_random=0"), fl
+    # the MoE dispatch A/B rows must carry the measured speedup
+    for name in ("overhead.moe_dispatch_scatter_granite_moe",
+                 "overhead.moe_dispatch_scatter_llama4"):
+        assert notes[name].startswith("speedup="), (name, notes[name])
 
 
 def test_bench_json_emit_and_diff(tmp_path):

@@ -1,0 +1,120 @@
+"""launch/matrix.py: the zoo-wide waste matrix driver.
+
+Covers the report schema, the skip/error accounting, the ranking order,
+the markdown leaderboard, seeded determinism across two runs, and the
+closed detect->optimize loops: the MoE dead-expert-store fraction is 0
+under the default scatter dispatch and reappears (and trips the CI
+gate) when the cells are rerun with the einsum reference dispatch.
+"""
+import json
+
+import pytest
+
+from repro.configs import registry
+from repro.launch import matrix
+
+MOE = "granite-moe-3b-a800m"
+WHISPER = "whisper-large-v3"
+
+
+@pytest.fixture(scope="module")
+def report():
+    """One toy matrix over an MoE and an encoder-decoder config."""
+    return matrix.run_cells([MOE, WHISPER], toy=True, verbose=False)["report"]
+
+
+@pytest.fixture(scope="module")
+def einsum_report():
+    """The MoE train cell under the pre-fix einsum dispatch."""
+    return matrix.run_cells([MOE], toy=True, shapes=["train_4k"],
+                            moe_dispatch="einsum",
+                            verbose=False)["report"]
+
+
+def _cell(report, arch, shape):
+    (c,) = [c for c in report["cells"]
+            if c["arch"] == arch and c["shape"] == shape]
+    return c
+
+
+def test_report_schema_and_cell_accounting(report):
+    assert report["schema"] == matrix.SCHEMA
+    assert report["configs"] == [MOE, WHISPER]
+    # every registry shape gets a cell row per config, in registry order
+    assert [(c["arch"], c["shape"]) for c in report["cells"]] == \
+        [(a, s.name) for a in (MOE, WHISPER) for s in registry.SHAPES]
+    for c in report["cells"]:
+        if c["applicable"]:
+            assert c["error"] is None, c
+            assert c["reason"] == ""
+        else:
+            # quadratic-attention archs skip the 500k decode cell, with
+            # the registry's reason recorded in the report
+            assert c["shape"] == "long_500k"
+            assert "quadratic" in c["reason"]
+            assert c["findings"] == [] and c["fractions"] == {}
+
+
+def test_moe_dead_expert_store_is_zero_under_scatter(report):
+    c = _cell(report, MOE, "train_4k")
+    # the probe ran (the kind is accounted) and found nothing: scatter
+    # dispatch stores only routed rows, so the dead fraction is 0 by
+    # construction
+    assert c["fractions"]["dead_expert_store"] == 0.0
+    assert not any(f["kind"] == "dead_expert_store" for f in c["findings"])
+
+
+def test_moe_dead_expert_store_detected_under_einsum(einsum_report):
+    c = _cell(einsum_report, MOE, "train_4k")
+    assert c["fractions"]["dead_expert_store"] > 0.0
+    (f,) = [f for f in c["findings"] if f["kind"] == "dead_expert_store"]
+    assert f["tier"] == 3
+    assert f["site"].startswith("moe.py:")
+    assert f["bytes"] > 0 and f["count"] > 0
+    # and the CI gate trips on the regression
+    fails = matrix._gate_failures(einsum_report, 0.0)
+    assert any("dead_expert_store" in m for m in fails)
+
+
+def test_whisper_padding_ranks_in_matrix(report):
+    c = _cell(report, WHISPER, "prefill_32k")
+    (f,) = [f for f in c["findings"] if f["kind"] == "prefill_padding"]
+    assert f["tier"] == 2 and f["fraction"] > 0 and f["bytes"] > 0
+    # the residual bucketed padding still tops this two-config ranking
+    assert report["ranking"][0]["kind"] == "prefill_padding"
+    assert report["ranking"][0]["arch"] == WHISPER
+
+
+def test_ranking_is_all_findings_sorted(report):
+    rows = [f for c in report["cells"] for f in c["findings"]]
+    assert sorted(map(json.dumps, rows)) == \
+        sorted(map(json.dumps, report["ranking"]))
+    keys = [(-r["fraction"], -r["bytes"]) for r in report["ranking"]]
+    assert keys == sorted(keys)
+
+
+def test_leaderboard_markdown(report):
+    board = matrix.leaderboard(report)
+    lines = board.splitlines()
+    assert lines[0].startswith("| # | config | shape | tier |")
+    assert WHISPER in lines[2] and "prefill_padding" in lines[2]
+
+
+def test_gate_passes_post_fix(report):
+    assert matrix._gate_failures(report, 0.0) == []
+
+
+def test_gate_reports_cell_errors(report):
+    broken = json.loads(json.dumps(report))
+    broken["cells"][0]["error"] = "ValueError: boom"
+    fails = matrix._gate_failures(broken, None)
+    assert fails == [f"{MOE} x train_4k: ValueError: boom"]
+
+
+def test_two_runs_rank_identically():
+    """Seeded end to end: the same tree profiled twice produces a
+    byte-identical report (the acceptance criterion for CI)."""
+    kw = dict(toy=True, shapes=["train_4k"], verbose=False)
+    a = matrix.run_cells([MOE], **kw)["report"]
+    b = matrix.run_cells([MOE], **kw)["report"]
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)

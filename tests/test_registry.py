@@ -1,0 +1,104 @@
+"""configs/registry.py: the zoo is complete, cell gating is explained,
+and every config's train and decode steps trace abstractly.
+
+The trace tests run under jax.eval_shape — no parameter allocation, no
+compile — so a registry entry whose model cannot even build a jaxpr for
+its assigned work fails here rather than deep inside a matrix run.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import SHAPES, TrainConfig
+from repro.launch.lint import _abstract_cache, _train_batch
+from repro.models.zoo import build_model
+from repro.serve.decode import make_engine_tick, make_serve_step
+from repro.serve.engine import ENGINE_FAMILIES
+from repro.train import state as TS
+from repro.train.step import make_train_step
+
+EXPECTED_ARCHS = [
+    "starcoder2-7b", "qwen3-14b", "qwen3-1.7b", "granite-20b",
+    "llama4-scout-17b-a16e", "granite-moe-3b-a800m",
+    "llama-3.2-vision-90b", "whisper-large-v3", "zamba2-1.2b",
+    "xlstm-1.3b",
+]
+
+
+def test_registry_is_the_assigned_zoo():
+    assert registry.ARCH_IDS == EXPECTED_ARCHS
+    names = [registry.get_config(a).name for a in registry.ARCH_IDS]
+    assert len(set(names)) == len(names)
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError, match="unknown arch"):
+        registry.get_config("gpt-5")
+
+
+def test_get_shape_roundtrip():
+    for s in SHAPES:
+        assert registry.get_shape(s.name) is s
+    assert {s.kind for s in SHAPES} == {"train", "prefill", "decode"}
+
+
+def test_all_cells_yields_every_config_times_every_shape():
+    cells = list(registry.all_cells())
+    assert len(cells) == len(registry.ARCH_IDS) * len(SHAPES)
+    seen = [(arch, shape.name) for arch, _, shape, _, _ in cells]
+    assert seen == [(a, s.name) for a in registry.ARCH_IDS for s in SHAPES]
+
+
+def test_cell_applicable_reasons():
+    """Inapplicable cells carry a human-readable reason; applicable ones
+    an empty reason. Only quadratic-attention archs skip long_500k."""
+    for arch, cfg, shape, ok, why in registry.all_cells():
+        if ok:
+            assert why == "", (arch, shape.name)
+        else:
+            assert shape.name == "long_500k", (arch, shape.name)
+            assert not cfg.subquadratic
+            assert "quadratic" in why, why
+    subq = [a for a in registry.ARCH_IDS
+            if registry.get_config(a).subquadratic]
+    assert subq == ["zamba2-1.2b", "xlstm-1.3b"]
+    for a in subq:
+        ok, _ = registry.cell_applicable(registry.get_config(a),
+                                         registry.get_shape("long_500k"))
+        assert ok
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_train_step_traces_abstractly(arch):
+    cfg = registry.get_config(arch).smoke()
+    model = build_model(cfg)
+    tc = TrainConfig(learning_rate=1e-3, total_steps=10, warmup_steps=1)
+    step_fn = make_train_step(model, tc, None)
+    state = TS.abstract(model)
+    new_state, metrics = jax.eval_shape(step_fn, state,
+                                        _train_batch(cfg, 2, 32))
+    assert jax.tree_util.tree_structure(new_state.params) == \
+        jax.tree_util.tree_structure(state.params)
+    assert metrics["loss"].shape == ()
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_decode_step_traces_abstractly(arch):
+    cfg = registry.get_config(arch).smoke()
+    model = build_model(cfg)
+    params = model.abstract_params()
+    dparams = model.decode_params(params)
+    batch, max_len = 2, 48
+    cache = _abstract_cache(model, params, batch, max_len)
+    if cfg.family in ENGINE_FAMILIES:
+        out = jax.eval_shape(make_engine_tick(model), dparams, cache,
+                             jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+                             jax.ShapeDtypeStruct((batch,), jnp.bool_))
+    else:
+        out = jax.eval_shape(make_serve_step(model), dparams, cache,
+                             jax.ShapeDtypeStruct((batch, 1), jnp.int32))
+    nxt, new_cache = out[0], out[1]
+    assert nxt.shape[0] == batch
+    assert jax.tree_util.tree_structure(new_cache) == \
+        jax.tree_util.tree_structure(cache)
